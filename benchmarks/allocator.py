@@ -1,0 +1,63 @@
+"""Paper Fig. 15 analog: allocation strategy impact. PMDK-allocator stalls
+become, on TPU/XLA, the cost of growing a statically-shaped pool: a bigger
+pool must be re-materialized and every jitted op re-compiled (shape change).
+Preallocation makes splits pure data movement."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import DashConfig, DashEH
+from .common import Row, unique_keys
+
+N = 16_000
+
+
+def run():
+    keys = unique_keys(np.random.default_rng(61), N)
+    vals = np.zeros(N, np.uint32)
+
+    # preallocated pool (production config)
+    t0 = time.perf_counter()
+    t = DashEH(DashConfig(max_segments=256, dir_depth_max=12))
+    for i in range(0, N, 4000):
+        t.insert(keys[i:i + 4000], vals[i:i + 4000])
+    pre_s = time.perf_counter() - t0
+
+    # grow-on-demand: start tiny, double max_segments when full (recompiles)
+    t0 = time.perf_counter()
+    grow_events = 0
+    cap = 8
+    t2 = DashEH(DashConfig(max_segments=cap, dir_depth_max=12))
+    i = 0
+    while i < N:
+        try:
+            t2.insert(keys[i:i + 4000], vals[i:i + 4000])
+            i += 4000
+        except Exception:
+            # "allocate a bigger pool": copy into a 2x state (shape change =>
+            # every jitted op recompiles; the Fig. 15 stall analog)
+            import jax.numpy as jnp
+            cap *= 2
+            grow_events += 1
+            big = DashEH(DashConfig(max_segments=cap, dir_depth_max=12))
+            old = t2.state
+            S_old = old.fp.shape[0]
+            new_state = big.state
+            for f in old._fields:
+                o, nw = getattr(old, f), getattr(new_state, f)
+                if hasattr(o, "shape") and o.ndim >= 1 and o.shape[:1] == (S_old,):
+                    nw = nw.at[:S_old].set(o)
+                    new_state = new_state._replace(**{f: nw})
+                else:
+                    new_state = new_state._replace(**{f: o})
+            big.state = new_state
+            t2 = big
+    grow_s = time.perf_counter() - t0
+
+    return [Row("fig15/prealloc_pool", pre_s / N * 1e6,
+                f"total={pre_s:.2f}s"),
+            Row("fig15/grow_on_demand", grow_s / N * 1e6,
+                f"total={grow_s:.2f}s; regrows={grow_events}; "
+                f"slowdown={grow_s / pre_s:.2f}x")]

@@ -1,0 +1,54 @@
+"""Shared benchmark harness: timing, key generation, CSV emission.
+
+Every module exposes ``run() -> list[Row]``; benchmarks.run prints
+``name,us_per_call,derived`` CSV (one row per measured configuration).
+Sizes are tuned for the 1-core CPU container: the numbers demonstrate the
+paper's RELATIVE effects (fingerprint speedups, load-factor stacks, O(1)
+recovery); absolute Mops/s belongs to the TPU deployment.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Row:
+    name: str
+    us_per_call: float
+    derived: str = ""
+
+    def csv(self) -> str:
+        return f"{self.name},{self.us_per_call:.3f},{self.derived}"
+
+
+def unique_keys(rng: np.random.Generator, n: int) -> np.ndarray:
+    out = np.unique(rng.integers(1, 2**63, size=int(n * 2.2) + 16,
+                                 dtype=np.uint64))
+    assert out.size >= n
+    return out[:n]
+
+
+def time_op(fn: Callable[[], object], repeats: int = 3,
+            warmup: int = 1) -> float:
+    """Median wall seconds of fn() (fn must block on device results)."""
+    for _ in range(warmup):
+        fn()
+    ts = []
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+def ops_row(name: str, seconds: float, n_ops: int, extra: str = "") -> Row:
+    us = seconds / n_ops * 1e6
+    mops = n_ops / seconds / 1e6
+    derived = f"{mops:.3f} Mops/s"
+    if extra:
+        derived += f"; {extra}"
+    return Row(name, us, derived)

@@ -1,0 +1,56 @@
+"""Paper Fig. 13: optimistic (lock-free reads, zero writes) vs pessimistic
+(read-lock = version writes per probed bucket, serialized) search.
+
+On PM the pessimistic cost is lock-word writes; here it shows up as (a) HBM
+write traffic (measured via cost_analysis bytes) and (b) the serialization
+of the batch (scan vs vmap)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DashConfig, DashEH, engine
+from repro.core.hashing import np_split_keys
+from .common import Row, ops_row, time_op, unique_keys
+
+N = 16_000
+BATCH = 2048
+
+
+def run():
+    rng = np.random.default_rng(41)
+    keys = unique_keys(rng, N)
+    t = DashEH(DashConfig(max_segments=128, dir_depth_max=10))
+    t.insert(keys, (np.arange(N) % 2**32).astype(np.uint32))
+    hi, lo = np_split_keys(keys[:BATCH])
+    hi, lo = jnp.asarray(hi), jnp.asarray(lo)
+
+    rows = []
+    s_opt = time_op(lambda: jax.block_until_ready(
+        engine.search_batch(t.cfg, "eh", t.state, hi, lo)))
+    rows.append(ops_row("fig13/optimistic_search", s_opt, BATCH))
+
+    state = t.state
+    def pess():
+        nonlocal state
+        state, f, v = engine.search_batch_pessimistic(
+            t.cfg, "eh", jax.tree.map(jnp.copy, state), hi, lo)
+        jax.block_until_ready(f)
+    s_pess = time_op(pess)
+    rows.append(ops_row("fig13/pessimistic_search", s_pess, BATCH))
+    rows.append(Row("fig13/speedup", 0.0,
+                    f"{s_pess/s_opt:.1f}x optimistic over pessimistic"))
+
+    # write-traffic accounting: pessimistic search WRITES version words
+    c_opt = jax.jit(lambda st: engine.search_batch(t.cfg, "eh", st, hi, lo)
+                    ).lower(t.state).compile().cost_analysis()
+    c_pess = jax.jit(lambda st: engine.search_batch_pessimistic(
+        t.cfg, "eh", st, hi, lo)).lower(t.state).compile().cost_analysis()
+    if isinstance(c_opt, list):
+        c_opt, c_pess = c_opt[0], c_pess[0]
+    bo = c_opt.get("bytes accessed output {}", c_opt.get("bytes accessed", 0))
+    bp = c_pess.get("bytes accessed output {}", c_pess.get("bytes accessed", 0))
+    rows.append(Row("fig13/output_bytes", 0.0,
+                    f"optimistic={bo:.3g}; pessimistic={bp:.3g}"))
+    return rows

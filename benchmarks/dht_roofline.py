@@ -1,0 +1,62 @@
+"""Distributed-Dash roofline on the production mesh: lower+compile the
+shard_map DHT search for 256 fake devices and account fabric vs HBM bytes —
+the scaling argument of DESIGN.md quantified from the compiled artifact."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+from .common import Row
+
+_CODE = textwrap.dedent("""
+    import os
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+    import json
+    import numpy as np
+    import jax, jax.numpy as jnp
+    from repro.core import DashConfig
+    from repro.distributed import dht
+    from repro.launch.mesh import make_production_mesh
+    from repro.launch import hlo_analysis
+
+    cfg = DashConfig(max_segments=64, dir_depth_max=10)
+    mesh = make_production_mesh(multi_pod=False)
+    with mesh:
+        search_fn, insert_fn, n = dht.build_dht_ops(
+            cfg, mesh, axes=("data", "model"), capacity=None, q_local_hint=1024)
+        st = dht.make_abstract(cfg, n)
+        q = jax.ShapeDtypeStruct((n, 1024), jnp.uint32)
+        lowered = jax.jit(search_fn).lower(st, q, q)
+        compiled = lowered.compile()
+        res = hlo_analysis.analyze(compiled.as_text())
+    queries_per_dev = 1024
+    fabric = sum(res["collectives"].values())
+    # local probe HBM bytes: 2 buckets x (fp 16B + meta 12B + hit slots)
+    hbm = queries_per_dev * 2 * (16 + 12 + 16)
+    print("RESULT " + json.dumps({
+        "n_shards": n, "fabric_bytes_per_dev": fabric,
+        "hbm_bytes_per_dev_est": hbm,
+        "fabric_us_at_50GBs": fabric / 50e9 * 1e6,
+        "hbm_us_at_819GBs": hbm / 819e9 * 1e6,
+        "collective_counts": res["collective_counts"]}))
+""")
+
+
+def run():
+    env = {**os.environ, "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", _CODE], capture_output=True,
+                       text=True, env=env, timeout=1800)
+    for ln in r.stdout.splitlines():
+        if ln.startswith("RESULT "):
+            d = json.loads(ln[len("RESULT "):])
+            return [Row("dht_roofline/256chips", 0.0,
+                        f"fabric={d['fabric_bytes_per_dev']:.3g}B/dev "
+                        f"({d['fabric_us_at_50GBs']:.1f}us@50GB/s) vs "
+                        f"hbm~{d['hbm_bytes_per_dev_est']:.3g}B "
+                        f"({d['hbm_us_at_819GBs']:.2f}us@819GB/s); "
+                        f"colls={d['collective_counts']}")]
+    return [Row("dht_roofline/256chips", 0.0,
+                f"failed: {r.stderr[-200:]}")]

@@ -1,0 +1,41 @@
+"""Paper Fig. 12: load factor vs items inserted — Dash-EH(2/4), Dash-LH,
+CCEH-like, Level hashing. The 'dips' are splits/rehashes."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DashConfig, DashEH, DashLH
+from repro.core.baselines import LevelConfig, LevelHashing, cceh_config
+from .common import Row, unique_keys
+
+N = 24_000
+STEP = 2000
+
+
+def curve(make):
+    t = make()
+    rng = np.random.default_rng(31)
+    keys = unique_keys(rng, N)
+    out = []
+    for i in range(0, N, STEP):
+        t.insert(keys[i:i + STEP],
+                 (np.arange(i, i + STEP) % 2**32).astype(np.uint32))
+        out.append(t.load_factor)
+    return out
+
+
+def run():
+    tables = {
+        "dash-eh-2": lambda: DashEH(DashConfig(max_segments=256, dir_depth_max=12, num_stash=2)),
+        "dash-eh-4": lambda: DashEH(DashConfig(max_segments=256, dir_depth_max=12, num_stash=4)),
+        "dash-lh": lambda: DashLH(DashConfig(max_segments=256, num_stash=4)),
+        "cceh-like": lambda: DashEH(cceh_config(max_segments=1024, dir_depth_max=13)),
+        "level": lambda: LevelHashing(LevelConfig(max_log2=14, init_log2=8)),
+    }
+    rows = []
+    for name, make in tables.items():
+        c = curve(make)
+        rows.append(Row(f"fig12/{name}", 0.0,
+                        f"peak={max(c):.3f}; mean={np.mean(c):.3f}; "
+                        f"curve={'|'.join(f'{x:.2f}' for x in c)}"))
+    return rows

@@ -1,0 +1,52 @@
+"""Paper Fig. 11: max load factor of ONE segment vs segment size, adding
+techniques one by one: bucketized -> +probing -> +balanced/displacement ->
++stash(2/4). Segment size varies via bucket count (256B buckets)."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DashConfig, DashEH, TableFullError
+from .common import Row, unique_keys
+
+VARIANTS = {
+    "bucketized": dict(use_balanced=False, use_displacement=False,
+                       probe_len=1, num_stash=0),
+    "+probing": dict(use_balanced=False, use_displacement=False,
+                     probe_len=2, num_stash=0),
+    "+balanced+displace": dict(use_balanced=True, use_displacement=True,
+                               num_stash=0),
+    "+stash2": dict(use_balanced=True, use_displacement=True, num_stash=2),
+    "+stash4": dict(use_balanced=True, use_displacement=True, num_stash=4),
+}
+
+
+def max_load_factor_one_segment(num_buckets: int, variant: dict) -> float:
+    cfg = DashConfig(num_buckets=num_buckets, max_segments=2, init_depth=0,
+                     dir_depth_max=1, **variant)
+    t = DashEH(cfg)
+    rng = np.random.default_rng(num_buckets)
+    keys = unique_keys(rng, cfg.seg_capacity * 2)
+    peak, i = 0.0, 0
+    try:
+        while i < keys.size:
+            st = t.insert(keys[i:i + 32], np.zeros(32, np.uint32))
+            if t.n_segments > 1:            # first split = segment was full
+                break
+            peak = max(peak, t.load_factor)
+            i += 32
+    except TableFullError:
+        pass
+    return peak
+
+
+def run():
+    rows = []
+    for nb in (4, 16, 64, 256):             # ~1KB, 4KB, 16KB, 64KB segments
+        seg_kb = nb * 256 // 1024
+        for name, variant in VARIANTS.items():
+            if variant["num_stash"] > 0 and nb < 4:
+                continue
+            lf = max_load_factor_one_segment(nb, variant)
+            rows.append(Row(f"fig11/seg{seg_kb}KB/{name}", 0.0,
+                            f"max_load_factor={lf:.3f}"))
+    return rows

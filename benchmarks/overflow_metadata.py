@@ -1,0 +1,94 @@
+"""Paper Fig. 10: overflow metadata lets probes skip the stash buckets.
+
+Like Fig. 9, the effect's currency is avoided traffic: without metadata every
+probe scans all active stash buckets; with it, only the MEASURED fraction of
+queries whose home bucket has a positive overflow counter or a matching
+overflow fingerprint touches the stash. We report that fraction (from the
+live structure, per real query batch) and the resulting bytes, plus CPU wall
+time for transparency."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DashConfig, DashEH, layout
+from repro.core.hashing import np_hash1, np_hash2, np_split_keys
+from .common import Row, ops_row, time_op, unique_keys
+
+N = 20_000
+BATCH = 4096
+STASH_BUCKET_BYTES = 16 + 4 + 14 * 12    # fp plane + meta + slots
+
+
+def _stash_probe_fraction(t, queries):
+    """Fraction of queries that must touch the stash under the metadata rules
+    (ovf_count>0 forces a scan; else only matching overflow fingerprints)."""
+    hi, lo = np_split_keys(queries)
+    h1, h2 = np_hash1(hi, lo), np_hash2(hi, lo)
+    cfg = t.cfg
+    seg = np.asarray(t.state.dir)[h1 >> np.uint32(32 - cfg.dir_depth_max)]
+    b = (h1 & np.uint32(cfg.num_buckets - 1)).astype(np.int64)
+    pb = (b + 1) % cfg.num_buckets
+    om = np.asarray(t.state.ometa)
+    ofp = np.asarray(t.state.ofp)
+    fpv = (h2 & np.uint32(0xFF)).astype(np.uint8)
+
+    om_b = om[seg, b]
+    ovf_cnt = (om_b >> np.uint32(layout.OVFC_SHIFT)) & np.uint32(0x7F)
+    need = ovf_cnt > 0
+    for bucket, member in ((b, 0), (pb, 1)):
+        o = om[seg, bucket]
+        oa = o & np.uint32(0xF)
+        omem = (o >> np.uint32(4)) & np.uint32(0xF)
+        for j in range(cfg.num_ofp):
+            allocated = ((oa >> np.uint32(j)) & 1) == 1
+            mm = ((omem >> np.uint32(j)) & 1) == member
+            match = allocated & mm & (ofp[seg, bucket, j] == fpv)
+            need = need | match
+    return float(need.mean())
+
+
+def _fill_to_capacity(cfg):
+    """Fill a fixed table (no split headroom) to its natural limit, so the
+    stash is genuinely populated — the regime Fig. 10 measures."""
+    from repro.core import TableFullError
+    t = DashEH(cfg)
+    keys = unique_keys(np.random.default_rng(23), cfg.max_segments * cfg.seg_capacity)
+    i = 0
+    try:
+        while i < keys.size:
+            st = t.insert(keys[i:i + 128], np.zeros(128, np.uint32))
+            if (st == 2).any():       # NEED_SPLIT surfaced => full
+                break
+            i += 128
+    except TableFullError:
+        pass
+    return t, keys[:i]
+
+
+def run():
+    rng = np.random.default_rng(23)
+    rows = []
+    for stash in (2, 4):
+        t, keys = _fill_to_capacity(DashConfig(
+            max_segments=8, init_depth=3, dir_depth_max=8, num_stash=stash))
+        neg = np.setdiff1d(unique_keys(np.random.default_rng(24), 8000), keys)[:BATCH]
+        for op, q in (("search_pos", keys[:BATCH]), ("search_neg", neg)):
+            frac = _stash_probe_fraction(t, q)
+            with_meta = frac * stash * STASH_BUCKET_BYTES + 2 * 2  # +ometa words
+            without = stash * STASH_BUCKET_BYTES
+            rows.append(Row(
+                f"fig10/bytes/{op}/stash{stash}", 0.0,
+                f"meta_on={with_meta:.0f}B meta_off={without:.0f}B "
+                f"saving={without/max(with_meta,1e-9):.2f}x "
+                f"(stash-probe fraction={frac:.4f})"))
+        rows.append(Row(f"fig10/load_factor/stash{stash}", 0.0,
+                        f"{t.load_factor:.3f} with {keys.size} records"))
+        # wall time comparison on the same populated table
+        for meta in (True, False):
+            tag = f"stash{stash}/{'meta_on' if meta else 'meta_off'}"
+            import dataclasses
+            t.cfg = dataclasses.replace(t.cfg, use_overflow_meta=meta)
+            s = time_op(lambda: t.search(neg))
+            rows.append(ops_row(f"fig10/walltime/search_neg/{tag}", s, BATCH))
+        t.cfg = dataclasses.replace(t.cfg, use_overflow_meta=True)
+    return rows

@@ -1,0 +1,169 @@
+"""Roofline report: three terms per (arch x shape x mesh) from the dry-run.
+
+    compute term    = corrected HLO dot FLOPs / peak FLOP/s      (per chip)
+    memory term     = HBM bytes per step / HBM bandwidth         (per chip)
+    collective term = collective wire bytes / ICI link bandwidth (per chip)
+
+Sources: ``dot_flops_per_device`` and ``collective_wire_bytes`` come from the
+compiled dry-run artifact (launch/hlo_analysis.py corrects lax.scan bodies by
+their trip counts — raw cost_analysis counts them once). HBM bytes use the
+standard closed forms over the same compiled shardings:
+
+  train:   3 passes over resident params (fwd read, bwd read, optimizer RW)
+           + 2 x saved-activation bytes (write + read across fwd/bwd)
+  prefill: 1 x params + activation writes
+  decode:  1 x params + full KV-cache read + O(1) write   (classic decode
+           roofline: cache streaming dominates)
+
+Hardware model (TPU v5e): 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s/ICI link.
+
+Usage: PYTHONPATH=src python -m benchmarks.roofline [--mesh pod] [--md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+from pathlib import Path
+
+import numpy as np
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+
+_SEQ = {"train_4k": (4096, 256), "prefill_32k": (32768, 32),
+        "decode_32k": (32768, 128), "long_500k": (524288, 1)}
+
+
+def _model_flops_per_device(arch: str, shape: str, n_dev: int) -> float:
+    """Analytic MODEL_FLOPS: 6*N_active*D (+ attention term) per device."""
+    from repro.configs import get_config
+    cfg = get_config(arch)
+    S, B = _SEQ[shape]
+    n_active = cfg.active_param_count()
+    if shape.startswith("train"):
+        tokens = S * B
+        flops = 6.0 * n_active * tokens
+        # attention: fwd 4*S_eff*d per token, x3 for bwd
+        w = cfg.sliding_window or S
+        kinds = list(cfg.pattern) * cfg.n_blocks + list(cfg.tail)
+        for k in kinds:
+            s_eff = min(cfg.local_window if k == "local" else w, S) / 2
+            if k == "rwkv":
+                flops += 12.0 * tokens * 64 * cfg.d_model      # chunked WKV
+            elif k == "rglru":
+                flops += 40.0 * tokens * (cfg.d_rnn or cfg.d_model)
+            else:
+                flops += 12.0 * tokens * s_eff * cfg.n_heads * cfg.hd
+        return flops / n_dev
+    if shape.startswith("prefill"):
+        tokens = S * B
+        flops = 2.0 * n_active * tokens
+        w = cfg.sliding_window or S
+        kinds = list(cfg.pattern) * cfg.n_blocks + list(cfg.tail)
+        for k in kinds:
+            s_eff = min(cfg.local_window if k == "local" else w, S) / 2
+            if k == "rwkv":
+                flops += 4.0 * tokens * 64 * cfg.d_model
+            elif k == "rglru":
+                flops += 14.0 * tokens * (cfg.d_rnn or cfg.d_model)
+            else:
+                flops += 4.0 * tokens * s_eff * cfg.n_heads * cfg.hd
+        return flops / n_dev
+    # decode: one token per sequence
+    flops = 2.0 * n_active * B
+    return flops / n_dev
+
+
+def _memory_bytes_per_device(rec: dict) -> float:
+    """Closed-form HBM traffic per step per chip (see module docstring)."""
+    from repro.configs import get_config
+    cfg = get_config(rec["arch"])
+    S, B = _SEQ[rec["shape"]]
+    static = rec["static_bytes_per_device"]
+    if rec["shape"].startswith("train"):
+        params = static / 3.0              # params + m + v were counted
+        act_bytes = _activation_bytes(cfg, S, B, rec["n_devices"])
+        return 3.0 * params + 4.0 * params + 2.0 * act_bytes  # opt RW = 4x
+    if rec["shape"].startswith("prefill"):
+        return static + _activation_bytes(cfg, S, B, rec["n_devices"])
+    # decode: params once + cache streamed once (+small writes)
+    return static * 1.02
+
+
+def _activation_bytes(cfg, S, B, n_dev) -> float:
+    """Saved activations under the layer scan (bf16 carry per layer)."""
+    layers = cfg.n_layers
+    return 2.0 * B * S * cfg.d_model * layers / n_dev
+
+
+def load_records(mesh: str = "pod", root: str = "experiments/dryrun"):
+    recs = []
+    for f in sorted(glob.glob(f"{root}/{mesh}/*.json")):
+        r = json.load(open(f))
+        if r["status"] != "ok":
+            recs.append(r)
+            continue
+        n = r["n_devices"]
+        compute_t = r["dot_flops_per_device"] / PEAK_FLOPS
+        mem_t = _memory_bytes_per_device(r) / HBM_BW
+        coll_bytes = sum(r["collective_wire_bytes"].values())
+        coll_t = coll_bytes / ICI_BW
+        terms = {"compute": compute_t, "memory": mem_t, "collective": coll_t}
+        dom = max(terms, key=terms.get)
+        bound = max(terms.values())
+        model_fl = _model_flops_per_device(r["arch"], r["shape"], n)
+        r.update({
+            "compute_s": compute_t, "memory_s": mem_t, "collective_s": coll_t,
+            "dominant": dom,
+            "roofline_fraction": compute_t / bound if bound else 0.0,
+            "model_flops_per_device": model_fl,
+            "useful_compute_ratio": (model_fl / r["dot_flops_per_device"]
+                                     if r["dot_flops_per_device"] else 0.0),
+        })
+        recs.append(r)
+    return recs
+
+
+def render(recs, md=False):
+    hdr = ("arch", "shape", "compute_s", "memory_s", "collective_s",
+           "dominant", "roofline_frac", "useful_ratio")
+    lines = []
+    if md:
+        lines.append("| " + " | ".join(hdr) + " |")
+        lines.append("|" + "---|" * len(hdr))
+    else:
+        lines.append(",".join(hdr))
+    for r in recs:
+        if r["status"] == "skipped":
+            row = (r["arch"], r["shape"], "-", "-", "-", "skipped(full-attn)",
+                   "-", "-")
+        else:
+            row = (r["arch"], r["shape"], f"{r['compute_s']:.4f}",
+                   f"{r['memory_s']:.4f}", f"{r['collective_s']:.4f}",
+                   r["dominant"], f"{r['roofline_fraction']:.3f}",
+                   f"{r['useful_compute_ratio']:.2f}")
+        lines.append(("| " + " | ".join(row) + " |") if md else ",".join(row))
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod"])
+    ap.add_argument("--md", action="store_true")
+    args = ap.parse_args()
+    recs = load_records(args.mesh)
+    print(render(recs, args.md))
+    ok = [r for r in recs if r["status"] == "ok"]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        most_coll = max(ok, key=lambda r: r["collective_s"])
+        print(f"\n# worst roofline fraction: {worst['arch']} x {worst['shape']}"
+              f" ({worst['roofline_fraction']:.3f})")
+        print(f"# most collective-bound: {most_coll['arch']} x "
+              f"{most_coll['shape']} ({most_coll['collective_s']:.3f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,68 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
+"""Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--only fig9]``.
+
+Modules map 1:1 to the paper's artifacts:
+  fig7   single_op            per-op cost, 4 tables, fixed + var-len keys
+  fig8   scalability          shard scaling + mixed workload + DHT
+  fig9   fingerprint_effect   fingerprints on/off
+  fig10  overflow_metadata    stash metadata on/off x stash count
+  fig11  load_factor_stack    technique stack vs segment size
+  fig12  load_factor_curve    load factor vs inserts, 5 schemes
+  fig13  concurrency          optimistic vs pessimistic search
+  table1 recovery_time        restart cost vs data size
+  fig14  lazy_recovery        post-restart throughput timeline
+  fig15  allocator            preallocated pool vs grow-on-demand
+  extra  dht_roofline         256-chip DHT fabric-vs-HBM accounting
+  extra  kernel_probe         Pallas probe path timing (interpret)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+MODULES = [
+    ("fig7", "benchmarks.single_op"),
+    ("fig8", "benchmarks.scalability"),
+    ("fig9", "benchmarks.fingerprint_effect"),
+    ("fig10", "benchmarks.overflow_metadata"),
+    ("fig11", "benchmarks.load_factor_stack"),
+    ("fig12", "benchmarks.load_factor_curve"),
+    ("fig13", "benchmarks.concurrency"),
+    ("table1", "benchmarks.recovery_time"),
+    ("fig14", "benchmarks.lazy_recovery"),
+    ("fig15", "benchmarks.allocator"),
+    ("dht", "benchmarks.dht_roofline"),
+    ("kernel", "benchmarks.kernel_probe"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated tags (fig7,fig9,...)")
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+
+    print("name,us_per_call,derived")
+    failures = []
+    for tag, modname in MODULES:
+        if only and tag not in only:
+            continue
+        t0 = time.time()
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            for row in mod.run():
+                print(row.csv(), flush=True)
+            print(f"# {tag} done in {time.time()-t0:.0f}s", flush=True)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((tag, repr(e)))
+            print(f"{tag}/FAILED,0,{e!r}", flush=True)
+    if failures:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

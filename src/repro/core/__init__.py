@@ -1,0 +1,19 @@
+"""Dash on TPU — core hash-table library (the paper's contribution).
+
+Public API:
+    DashConfig           static configuration / feature flags
+    DashEH, DashLH       host-facing dynamic hash tables
+    make_state           raw functional state constructor
+    engine               batched functional ops (insert/search/delete)
+"""
+from .layout import (DashConfig, DashState, make_state, load_factor,
+                     INSERTED, EXISTS, NEED_SPLIT, DROPPED, NOT_FOUND)
+from .table import DashEH, DashLH, DashTable, TableFullError
+from . import bucket, dash_eh, dash_lh, engine, hashing, layout, recovery
+
+__all__ = [
+    "DashConfig", "DashState", "make_state", "load_factor",
+    "DashEH", "DashLH", "DashTable", "TableFullError",
+    "INSERTED", "EXISTS", "NEED_SPLIT", "DROPPED", "NOT_FOUND",
+    "bucket", "dash_eh", "dash_lh", "engine", "hashing", "layout", "recovery",
+]

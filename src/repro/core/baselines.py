@@ -1,0 +1,333 @@
+"""Baselines the paper compares against, ported to the same JAX substrate.
+
+* CCEH-like — expressed as a ``DashConfig`` of the shared engine
+  (``cceh_config``): 4-slot buckets ("64-byte, one cacheline"), linear
+  probing of 4 buckets, no fingerprints, no balanced insert / displacement,
+  no stash; split on probe-window exhaustion. This isolates the *algorithm*
+  (probing-4 + premature splits) from implementation language, exactly what
+  Figs. 7/8/12 compare.
+
+* Level hashing — a two-level scheme with its own structure (this module):
+  top level of 2^k 4-slot buckets, bottom level of 2^(k-1); each key has two
+  candidate buckets per level (two hash functions); one movement attempt in
+  the top level; **full-table rehash** on resize (new top = 2^(k+1), old top
+  becomes the bottom) — the blocking rehash the paper contrasts with
+  dynamic schemes (Sec. 2.2, Fig. 8's insert collapse).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import hashing
+from .layout import EXISTS, INSERTED, NEED_SPLIT, NOT_FOUND, DashConfig, U32
+
+I32 = jnp.int32
+
+
+def cceh_config(max_segments: int = 64, dir_depth_max: int = 12) -> DashConfig:
+    """CCEH as a feature-flag point of the Dash engine (Sec. 2.3)."""
+    return DashConfig(
+        num_buckets=64, num_stash=0, num_slots=4, num_ofp=0,
+        max_segments=max_segments, dir_depth_max=dir_depth_max,
+        use_fingerprints=False, use_balanced=False, use_displacement=False,
+        probe_len=4,
+    )
+
+
+def bucketized_config(**kw) -> DashConfig:
+    """Fig. 11 'Bucketized': no probing, no balancing, no stash."""
+    return DashConfig(num_stash=0, use_fingerprints=True, use_balanced=False,
+                      use_displacement=False, probe_len=1, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Level hashing
+# ---------------------------------------------------------------------------
+
+SLOTS = 4
+
+
+@dataclasses.dataclass(frozen=True)
+class LevelConfig:
+    max_log2: int = 14          # max top-level log2 (pool is 2^max + 2^(max-1))
+    init_log2: int = 6
+
+
+class LevelState(NamedTuple):
+    key_hi: jnp.ndarray   # (CAP, 4) uint32
+    key_lo: jnp.ndarray
+    val: jnp.ndarray
+    alloc: jnp.ndarray    # (CAP,) uint32 bitmap (4 bits)
+    k: jnp.ndarray        # () int32 — top level is 2^k buckets
+    n_items: jnp.ndarray  # () int32
+    n_rehashes: jnp.ndarray
+
+
+def _cap(cfg: LevelConfig) -> int:
+    return (1 << cfg.max_log2) + (1 << (cfg.max_log2 - 1))
+
+
+def level_make_state(cfg: LevelConfig) -> LevelState:
+    CAP = _cap(cfg)
+    return LevelState(
+        key_hi=jnp.zeros((CAP, SLOTS), U32),
+        key_lo=jnp.zeros((CAP, SLOTS), U32),
+        val=jnp.zeros((CAP, SLOTS), U32),
+        alloc=jnp.zeros((CAP,), U32),
+        k=jnp.asarray(cfg.init_log2, jnp.int32),
+        n_items=jnp.asarray(0, jnp.int32),
+        n_rehashes=jnp.asarray(0, jnp.int32),
+    )
+
+
+def _buckets_for(cfg: LevelConfig, state: LevelState, h1, h2):
+    """The four candidate buckets: two top (offset 0), two bottom
+    (offset 2^max_log2)."""
+    kt = state.k.astype(U32)
+    top_a = (h1 & ((U32(1) << kt) - 1)).astype(I32)
+    top_b = (h2 & ((U32(1) << kt) - 1)).astype(I32)
+    kb = kt - 1
+    boff = 1 << cfg.max_log2
+    bot_a = boff + (h1 & ((U32(1) << kb) - 1)).astype(I32)
+    bot_b = boff + (h2 & ((U32(1) << kb) - 1)).astype(I32)
+    return top_a, top_b, bot_a, bot_b
+
+
+def _probe_bucket(state: LevelState, b, q_hi, q_lo):
+    ids = jnp.arange(SLOTS, dtype=U32)
+    allocated = ((state.alloc[b] >> ids) & U32(1)) == 1
+    eq = allocated & (state.key_hi[b] == q_hi) & (state.key_lo[b] == q_lo)
+    return jnp.any(eq), jnp.argmax(eq).astype(I32)
+
+
+def _free_slot(state: LevelState, b):
+    ids = jnp.arange(SLOTS, dtype=U32)
+    free = ((state.alloc[b] >> ids) & U32(1)) == 0
+    return jnp.any(free), jnp.argmax(free).astype(I32)
+
+
+def _count(state: LevelState, b):
+    ids = jnp.arange(SLOTS, dtype=U32)
+    return jnp.sum(((state.alloc[b] >> ids) & U32(1)).astype(I32))
+
+
+def _write(state: LevelState, b, slot, hi, lo, v):
+    return state._replace(
+        key_hi=state.key_hi.at[b, slot].set(hi),
+        key_lo=state.key_lo.at[b, slot].set(lo),
+        val=state.val.at[b, slot].set(v),
+        alloc=state.alloc.at[b].set(state.alloc[b] | (U32(1) << slot.astype(U32))),
+    )
+
+
+def _clear(state: LevelState, b, slot):
+    return state._replace(
+        alloc=state.alloc.at[b].set(state.alloc[b] & ~(U32(1) << slot.astype(U32))))
+
+
+def level_insert_one(cfg: LevelConfig, state: LevelState, hi, lo, v):
+    h1, h2 = hashing.hash1(hi, lo), hashing.hash2(hi, lo)
+    ta, tb, ba, bb = _buckets_for(cfg, state, h1, h2)
+
+    # uniqueness
+    exists = jnp.asarray(False)
+    for b in (ta, tb, ba, bb):
+        f, _ = _probe_bucket(state, b, hi, lo)
+        exists = exists | f
+
+    # insertion candidates: less-loaded top first (level hashing is 2-choice),
+    # then bottom; then one movement attempt in the top level
+    cta, ctb = _count(state, ta), _count(state, tb)
+    top_first = jnp.where(cta <= ctb, ta, tb)
+    top_second = jnp.where(cta <= ctb, tb, ta)
+    order = [top_first, top_second, ba, bb]
+    frees = [_free_slot(state, b) for b in order]
+
+    can = jnp.stack([f for f, _ in frees])
+    which = jnp.argmax(can).astype(I32)
+    any_free = jnp.any(can)
+
+    # movement: evict one record of ta to ITS alternate top bucket
+    def movable(b):
+        r_hi, r_lo = state.key_hi[b, 0], state.key_lo[b, 0]
+        a1, a2 = hashing.hash1(r_hi, r_lo), hashing.hash2(r_hi, r_lo)
+        mta, mtb, _, _ = _buckets_for(cfg, state, a1, a2)
+        alt = jnp.where(mta == b, mtb, mta)
+        ok, slot = _free_slot(state, alt)
+        return ok, alt, slot
+
+    mv_ok, mv_alt, mv_slot = movable(ta)
+
+    code = jnp.where(exists, 0, jnp.where(any_free, 1, jnp.where(mv_ok, 2, 3)))
+
+    def br_exists(st):
+        return st, I32(EXISTS)
+
+    def br_plain(st):
+        b = jnp.stack(order)[which]
+        slot = jnp.stack([s for _, s in frees])[which]
+        return _write(st, b, slot, hi, lo, v), I32(INSERTED)
+
+    def br_move(st):
+        r_hi, r_lo, r_v = st.key_hi[ta, 0], st.key_lo[ta, 0], st.val[ta, 0]
+        st = _write(st, mv_alt, mv_slot, r_hi, r_lo, r_v)
+        st = _clear(st, ta, I32(0))
+        return _write(st, ta, I32(0), hi, lo, v), I32(INSERTED)
+
+    def br_resize(st):
+        return st, I32(NEED_SPLIT)
+
+    state, status = jax.lax.switch(code, [br_exists, br_plain, br_move, br_resize], state)
+    state = state._replace(n_items=state.n_items + (status == INSERTED).astype(I32))
+    return state, status
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def level_insert_batch(cfg: LevelConfig, state: LevelState, hi, lo, vals, valid=None):
+    if valid is None:
+        valid = jnp.ones(hi.shape[0], jnp.bool_)
+
+    def step(st, xs):
+        h, l, v, ok = xs
+        st, status = jax.lax.cond(
+            ok, lambda s: level_insert_one(cfg, s, h, l, v),
+            lambda s: (s, I32(NOT_FOUND)), st)
+        return st, status
+
+    return jax.lax.scan(step, state, (hi, lo, vals, valid))
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def level_search_batch(cfg: LevelConfig, state: LevelState, hi, lo):
+    def one(h, l):
+        h1, h2 = hashing.hash1(h, l), hashing.hash2(h, l)
+        found = jnp.asarray(False)
+        value = U32(0)
+        for b in _buckets_for(cfg, state, h1, h2):
+            f, slot = _probe_bucket(state, b, h, l)
+            value = jnp.where(f & ~found, state.val[b, slot], value)
+            found = found | f
+        return found, value
+
+    return jax.vmap(one)(hi, lo)
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def level_rehash(cfg: LevelConfig, state: LevelState):
+    """Full-table rehash: k -> k+1. Old top becomes the new bottom; old bottom
+    records are re-inserted. This is the operation that blocks concurrent
+    queries in level hashing (what Fig. 8 punishes)."""
+    CAP = _cap(cfg)
+    boff = 1 << cfg.max_log2
+
+    old_hi, old_lo, old_val, old_alloc = (state.key_hi, state.key_lo,
+                                          state.val, state.alloc)
+    old_k = state.k
+
+    fresh = LevelState(
+        key_hi=jnp.zeros_like(old_hi), key_lo=jnp.zeros_like(old_lo),
+        val=jnp.zeros_like(old_val), alloc=jnp.zeros_like(old_alloc),
+        k=old_k + 1, n_items=jnp.asarray(0, jnp.int32),
+        n_rehashes=state.n_rehashes + 1)
+
+    # move old top -> new bottom (bucket index preserved: 2^k buckets).
+    # At rehash time old_k <= max_log2-1, so the old top always fits the
+    # bottom region of CAP-boff = 2^(max_log2-1) buckets.
+    nbot = CAP - boff
+    fresh = fresh._replace(
+        key_hi=jax.lax.dynamic_update_slice(
+            fresh.key_hi, jax.lax.dynamic_slice(old_hi, (0, 0), (nbot, SLOTS)),
+            (boff, 0)),
+        key_lo=jax.lax.dynamic_update_slice(
+            fresh.key_lo, jax.lax.dynamic_slice(old_lo, (0, 0), (nbot, SLOTS)),
+            (boff, 0)),
+        val=jax.lax.dynamic_update_slice(
+            fresh.val, jax.lax.dynamic_slice(old_val, (0, 0), (nbot, SLOTS)),
+            (boff, 0)),
+        alloc=jax.lax.dynamic_update_slice(
+            fresh.alloc, jax.lax.dynamic_slice(old_alloc, (0,), (nbot,)), (boff,)),
+    )
+    # ... but only the first 2^old_k buckets were really the top; zero the rest
+    idx = jnp.arange(CAP)
+    in_new_bottom = (idx >= boff) & (idx < boff + (1 << cfg.max_log2 - 1))
+    keep = in_new_bottom & ((idx - boff) < (1 << old_k.astype(I32)))
+    fresh = fresh._replace(alloc=jnp.where((idx >= boff) & ~keep, U32(0), fresh.alloc))
+
+    # re-insert old bottom records through the new geometry
+    bot_hi = jax.lax.dynamic_slice(old_hi, (boff, 0), (CAP - boff, SLOTS)).reshape(-1)
+    bot_lo = jax.lax.dynamic_slice(old_lo, (boff, 0), (CAP - boff, SLOTS)).reshape(-1)
+    bot_val = jax.lax.dynamic_slice(old_val, (boff, 0), (CAP - boff, SLOTS)).reshape(-1)
+    bot_alloc = jax.lax.dynamic_slice(old_alloc, (boff,), (CAP - boff,))
+    ids = jnp.arange(SLOTS, dtype=U32)[None, :]
+    bot_valid = (((bot_alloc[:, None] >> ids) & U32(1)) == 1).reshape(-1)
+
+    def step(st, xs):
+        h, l, v, ok = xs
+        st, _ = jax.lax.cond(
+            ok, lambda s: level_insert_one(cfg, s, h, l, v),
+            lambda s: (s, I32(NOT_FOUND)), st)
+        return st, ()
+
+    fresh, _ = jax.lax.scan(step, fresh, (bot_hi, bot_lo, bot_val, bot_valid))
+
+    # recount
+    ids2 = jnp.arange(SLOTS, dtype=U32)[None, :]
+    n = jnp.sum(((fresh.alloc[:, None] >> ids2) & U32(1)).astype(I32))
+    return fresh._replace(n_items=n)
+
+
+class LevelHashing:
+    """Host wrapper mirroring the DashTable API surface."""
+
+    def __init__(self, cfg: LevelConfig = LevelConfig()):
+        self.cfg = cfg
+        self.state = level_make_state(cfg)
+
+    def insert(self, keys, values, max_retries: int = 8):
+        hi, lo = hashing.np_split_keys(np.asarray(keys, np.uint64))
+        vals = np.asarray(values, np.uint32)
+        out = np.full(hi.shape[0], NEED_SPLIT, np.int32)
+        pending = np.arange(hi.shape[0])
+        first = True
+        for _ in range(max_retries):
+            if first:
+                idx, valid = pending, None
+            else:
+                n = max(8, 1 << int(np.ceil(np.log2(max(pending.size, 1)))))
+                idx = np.concatenate([pending, np.zeros(n - pending.size, np.int64)])
+                valid = jnp.asarray(np.arange(n) < pending.size)
+            self.state, st = level_insert_batch(
+                self.cfg, self.state, jnp.asarray(hi[idx]), jnp.asarray(lo[idx]),
+                jnp.asarray(vals[idx]), valid)
+            st = np.asarray(st)[:pending.size]
+            out[pending] = st
+            failed = pending[st == NEED_SPLIT]
+            if failed.size == 0:
+                return out
+            if int(np.asarray(self.state.k)) >= self.cfg.max_log2:
+                raise RuntimeError("level hashing pool exhausted")
+            self.state = level_rehash(self.cfg, self.state)
+            pending = failed
+            first = False
+        raise RuntimeError("level insert retry budget exhausted")
+
+    def search(self, keys):
+        hi, lo = hashing.np_split_keys(np.asarray(keys, np.uint64))
+        f, v = level_search_batch(self.cfg, self.state, jnp.asarray(hi), jnp.asarray(lo))
+        return np.asarray(f), np.asarray(v)
+
+    @property
+    def n_items(self) -> int:
+        return int(np.asarray(self.state.n_items))
+
+    @property
+    def load_factor(self) -> float:
+        k = int(np.asarray(self.state.k))
+        cap = ((1 << k) + (1 << (k - 1))) * SLOTS
+        return self.n_items / cap

@@ -1,0 +1,200 @@
+"""Dash-EH: extendible hashing with Dash building blocks (paper Sec. 4).
+
+Segment split is the paper's three-step SMO (Sec. 4.7), expressed as two
+jitted phases with a crash-recoverable boundary between them:
+
+  phase 1 (allocate + initialize + link):  mark S SPLITTING, allocate N at the
+      pool watermark (PMDK allocate-activate analog: watermark and segment
+      init commit atomically in one functional update), chain side links,
+      set both local depths, mark N NEW.
+  phase 2 (rehash + publish):  redistribute records by the (ld+1)-th MSB,
+      update the directory prefix range to point at N, clear SMO states.
+
+Recovery after a crash between (or inside) the phases re-runs phase 2 with
+uniqueness checking — exactly the paper's "redo the rehashing with uniqueness
+check" (Sec. 4.8). Phase 2 is idempotent under that discipline.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine, hashing, layout
+from .layout import (EXISTS, INSERTED, NEED_SPLIT, SEG_NEW, SEG_NORMAL,
+                     SEG_SPLITTING, DashConfig, DashState, U32)
+
+I32 = jnp.int32
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def split_phase1(cfg: DashConfig, state: DashState, old_seg, new_seg=None):
+    """Allocate + initialize the new segment; returns (state, new_seg).
+    ``new_seg`` defaults to the pool watermark; the host may pass a recycled
+    id from the merge free-list (PMDK allocate/free analog)."""
+    if new_seg is None:
+        new_seg = state.watermark
+    ld = state.local_depth[old_seg]
+    state = state._replace(
+        seg_state=state.seg_state.at[old_seg].set(SEG_SPLITTING)
+                                 .at[new_seg].set(SEG_NEW),
+        side_link=state.side_link.at[new_seg].set(state.side_link[old_seg])
+                                 .at[old_seg].set(new_seg),
+        local_depth=state.local_depth.at[old_seg].set(ld + 1)
+                                      .at[new_seg].set(ld + 1),
+        seg_version=state.seg_version.at[new_seg].set(state.gver),
+        stash_active=state.stash_active.at[new_seg].set(cfg.num_stash),
+        watermark=jnp.maximum(state.watermark, new_seg + 1),
+    )
+    return state, new_seg
+
+
+def _clear_segment(cfg: DashConfig, state: DashState, seg):
+    """Zero a segment's planes (record identity + metadata words)."""
+    BT, NB, SL = cfg.buckets_total, cfg.num_buckets, cfg.num_slots
+    z8 = jnp.zeros((1, BT, 16), jnp.uint8)
+    return state._replace(
+        fp=jax.lax.dynamic_update_slice(state.fp, z8, (seg, 0, 0)),
+        ofp=jax.lax.dynamic_update_slice(state.ofp, jnp.zeros((1, NB, 4), jnp.uint8),
+                                         (seg, 0, 0)),
+        meta=jax.lax.dynamic_update_slice(state.meta, jnp.zeros((1, BT), U32), (seg, 0)),
+        ometa=jax.lax.dynamic_update_slice(state.ometa, jnp.zeros((1, NB), U32), (seg, 0)),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=(1,))
+def split_phase2(cfg: DashConfig, state: DashState, old_seg, new_seg,
+                 check_unique: bool = False):
+    """Rehash + directory publish. With ``check_unique=True`` (the recovery
+    path) it is idempotent w.r.t. records already moved — the paper's "redo
+    the rehashing with uniqueness check"; the normal path skips the probe.
+
+    Returns (state, all_refit) — all_refit is False only if a record could not
+    be placed in either half (cannot happen for a subset of a feasible
+    segment; asserted by the host wrapper).
+    """
+    ld_new = state.local_depth[old_seg]       # already ld+1 after phase 1
+    ld = ld_new - 1
+    hi, lo, val, valid = engine.segment_records(cfg, state, old_seg)
+    h1, h2 = engine.record_hashes(cfg, state, hi, lo)
+    move_bit = ((h1 >> (U32(31) - ld.astype(U32))) & U32(1)) == 1
+
+    state = _clear_segment(cfg, state, old_seg)
+
+    def step(st, xs):
+        r_hi, r_lo, r_val, r_valid, r_h1, r_h2, r_move = xs
+        seg = jnp.where(r_move, new_seg, old_seg)
+        b = layout.bucket_index(cfg, r_h1)
+
+        def do(s):
+            s2, status, _ = engine._insert_core(
+                cfg, s, seg, b, r_h1, r_h2, r_hi, r_lo,
+                jnp.zeros((cfg.key_heap_words,), U32), r_val,
+                check_unique=check_unique, heap_append=False)
+            return s2, status
+
+        def skip(s):
+            return s, I32(EXISTS)
+
+        st, status = jax.lax.cond(r_valid, do, skip, st)
+        return st, status != I32(NEED_SPLIT)
+
+    state, fits = jax.lax.scan(step, state, (hi, lo, val, valid, h1, h2, move_bit))
+
+    # directory publish: among entries owned by old_seg, the half whose
+    # (ld+1)-th MSB is 1 now points at new_seg (contiguous under MSB indexing)
+    idx = jnp.arange(cfg.dir_size, dtype=I32)
+    bit = (idx >> (cfg.dir_depth_max - ld_new)) & 1
+    take = (state.dir == old_seg) & (bit == 1)
+    state = state._replace(dir=jnp.where(take, new_seg, state.dir))
+
+    gd = state.global_depth
+    state = state._replace(
+        global_depth=jnp.maximum(gd, ld_new),
+        n_doublings=state.n_doublings + (ld_new > gd).astype(I32),
+        n_splits=state.n_splits + 1,
+        seg_state=state.seg_state.at[old_seg].set(SEG_NORMAL)
+                                 .at[new_seg].set(SEG_NORMAL),
+        seg_version=state.seg_version.at[old_seg].set(state.gver)
+                                     .at[new_seg].set(state.gver),
+        n_items=0,  # recomputed below
+        version=state.version.at[old_seg].add(U32(2)).at[new_seg].add(U32(2)),
+    )
+    state = state._replace(n_items=engine.recount_items(state))
+    return state, jnp.all(fits)
+
+
+def split_segment(cfg: DashConfig, state: DashState, old_seg, new_seg=None):
+    """Full SMO = phase 1 + phase 2 (host-visible convenience)."""
+    if new_seg is not None:
+        new_seg = jnp.asarray(new_seg, jnp.int32)
+    state, new_seg = split_phase1(cfg, state, jnp.asarray(old_seg, jnp.int32),
+                                  new_seg)
+    return split_phase2(cfg, state, jnp.asarray(old_seg, jnp.int32), new_seg)
+
+
+# ---------------------------------------------------------------------------
+# merge (the shrink SMO of Sec. 4.7: "when the load factor drops below a
+# threshold, segments can be merged to save space")
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def merge_segments(cfg: DashConfig, state: DashState, keep_seg, victim_seg):
+    """Merge ``victim`` into its buddy ``keep`` (same parent prefix, same
+    local depth). The caller guarantees the pair is a buddy pair and that
+    the combined records fit (host checks counts). The victim's directory
+    range is pointed back at ``keep`` and both drop one depth level —
+    the inverse of a split. Returns (state, all_refit)."""
+    hi, lo, val, valid = engine.segment_records(cfg, state, victim_seg)
+    h1, h2 = engine.record_hashes(cfg, state, hi, lo)
+
+    def step(st, xs):
+        r_hi, r_lo, r_val, r_valid, r_h1, r_h2 = xs
+        b = layout.bucket_index(cfg, r_h1)
+
+        def do(s):
+            s2, status, _ = engine._insert_core(
+                cfg, s, keep_seg, b, r_h1, r_h2, r_hi, r_lo,
+                jnp.zeros((cfg.key_heap_words,), U32), r_val,
+                check_unique=False, heap_append=False)
+            return s2, status
+
+        st, status = jax.lax.cond(r_valid, do, lambda s: (s, I32(EXISTS)), st)
+        return st, status != I32(NEED_SPLIT)
+
+    state, fits = jax.lax.scan(step, state, (hi, lo, val, valid, h1, h2))
+    state = _clear_segment(cfg, state, victim_seg)
+
+    ld = state.local_depth[keep_seg] - 1
+    state = state._replace(
+        dir=jnp.where(state.dir == victim_seg, keep_seg, state.dir),
+        local_depth=state.local_depth.at[keep_seg].set(ld),
+        side_link=state.side_link.at[keep_seg].set(state.side_link[victim_seg]),
+        seg_state=state.seg_state.at[victim_seg].set(SEG_NORMAL),
+        version=state.version.at[keep_seg].add(U32(2)),
+        n_items=0,
+    )
+    state = state._replace(n_items=engine.recount_items(state))
+    return state, jnp.all(fits)
+
+
+def find_buddy(cfg: DashConfig, state: DashState, seg: int):
+    """Host helper: the buddy of ``seg`` is the segment owning the sibling
+    prefix at the same local depth (its directory range is adjacent)."""
+    import numpy as np
+    dirv = np.asarray(state.dir)
+    depths = np.asarray(state.local_depth)
+    ld = int(depths[seg])
+    if ld == 0:
+        return None
+    entries = np.where(dirv == seg)[0]
+    span = 1 << (cfg.dir_depth_max - ld)
+    first = int(entries[0])
+    prefix = first >> (cfg.dir_depth_max - ld)
+    sib_first = (prefix ^ 1) << (cfg.dir_depth_max - ld)
+    buddy = int(dirv[sib_first])
+    if buddy == seg or int(depths[buddy]) != ld:
+        return None
+    return buddy

@@ -1,0 +1,114 @@
+"""Dash-LH: linear hashing with Dash building blocks (paper Sec. 5).
+
+Linear hashing always splits the segment at ``Next`` (not the overflowing
+one). ``(level, Next)`` live packed in one 32-bit word — the paper packs
+``(N, Next)`` into one 64-bit word for atomic update (Sec. 5.3); advancing the
+word *is* the split's publish point, after which addressing routes re-hashed
+keys with the next round's mask.
+
+The paper's stash-chaining replaces classic per-record overflow chains: a
+fixed base of stash buckets plus chained extras, and "a segment split is
+triggered whenever a stash bucket is allocated". Our static-shape analog:
+each segment owns ``num_stash`` preallocated stash buckets of which
+``stash_active[seg]`` are live; activating one beyond the base emits a split
+signal that the host wrapper turns into ``split_next`` (Sec. 5.3's
+split-by-accessing-thread, serialized here by batch semantics).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import engine, layout
+from .dash_eh import _clear_segment
+from .layout import (EXISTS, NEED_SPLIT, SEG_NORMAL, DashConfig, DashState, U32)
+
+I32 = jnp.int32
+
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def split_next(cfg: DashConfig, state: DashState):
+    """Split the segment at Next; advance (level, Next); returns (state, ok)."""
+    level, nxt = layout.lh_level_next(state.lh_word)
+    n_round = 1 << cfg.lh_base_log2
+    round_size = (n_round << level.astype(jnp.uint32)).astype(I32)
+
+    old_logical = nxt
+    new_logical = round_size + nxt
+    old_phys = state.lh_dir[old_logical]
+    new_phys = state.watermark
+
+    # advance the packed word FIRST (the atomic publish of Sec. 5.3): from now
+    # on, keys in the old logical bucket re-hash with the next round's mask.
+    nxt2 = nxt + 1
+    wrap = nxt2 >= round_size
+    new_word = layout.lh_pack(level + wrap.astype(I32), jnp.where(wrap, 0, nxt2))
+    state = state._replace(
+        lh_word=new_word,
+        lh_dir=state.lh_dir.at[new_logical].set(new_phys),
+        watermark=state.watermark + 1,
+        stash_active=state.stash_active
+            .at[old_phys].set(min(cfg.num_stash, cfg.lh_base_stash))
+            .at[new_phys].set(min(cfg.num_stash, cfg.lh_base_stash)),
+        seg_version=state.seg_version.at[new_phys].set(state.gver),
+    )
+
+    # rehash: extract old records, clear, re-insert through LH addressing
+    hi, lo, val, valid = engine.segment_records(cfg, state, old_phys)
+    h1, h2 = engine.record_hashes(cfg, state, hi, lo)
+    state = _clear_segment(cfg, state, old_phys)
+
+    def step(st, xs):
+        r_hi, r_lo, r_val, r_valid, r_h1, r_h2 = xs
+        seg = st.lh_dir[layout.lh_logical_segment(cfg, r_h1, st.lh_word)]
+        b = layout.lh_bucket_index(cfg, r_h1)
+
+        def do(s):
+            s2, status, _ = engine._insert_core(
+                cfg, s, seg, b, r_h1, r_h2, r_hi, r_lo,
+                jnp.zeros((cfg.key_heap_words,), U32), r_val,
+                check_unique=False, heap_append=False)
+            return s2, status
+
+        st, status = jax.lax.cond(r_valid, do, lambda s: (s, I32(EXISTS)), st)
+        return st, status != I32(NEED_SPLIT)
+
+    state, fits = jax.lax.scan(step, state, (hi, lo, val, valid, h1, h2))
+
+    state = state._replace(
+        n_splits=state.n_splits + 1,
+        n_items=engine.recount_items(state),
+    )
+    return state, jnp.all(fits)
+
+
+def lh_active_segments(cfg: DashConfig, state: DashState) -> int:
+    """Number of live logical segments (host-side helper)."""
+    import numpy as np
+    word = int(np.asarray(state.lh_word))
+    level, nxt = word >> 24, word & 0xFFFFFF
+    return (1 << cfg.lh_base_log2) * (1 << level) + nxt
+
+
+def hybrid_expansion_directory(n_segments: int, stride: int = 8,
+                               first_array: int = 64, entry_bytes: int = 8):
+    """Paper Sec. 5.2 hybrid expansion accounting: directory entries point to
+    segment ARRAYS; after every ``stride`` fixed-size expansions the array
+    size doubles. Returns (entries, directory_bytes, largest_array).
+
+    Reproduces the paper's claim: with 16KB segments, a 64-segment first
+    array and stride 4-8, TB-scale data is indexed by a sub-KB, L1-resident
+    directory."""
+    entries = 0
+    covered = 0
+    array_size = first_array
+    while covered < n_segments:
+        for _ in range(stride):
+            entries += 1
+            covered += array_size
+            if covered >= n_segments:
+                return entries, entries * entry_bytes, array_size
+        array_size *= 2
+    return entries, entries * entry_bytes, array_size

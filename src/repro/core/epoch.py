@@ -1,0 +1,84 @@
+"""Epoch-based reclamation (paper Sec. 4.4): lock-free readers + safe
+segment/state retirement.
+
+Dash readers hold no locks, so a snapshot being read must not be reclaimed
+until every reader that could see it has exited. In our batched adaptation
+the unit of protection is a STATE SNAPSHOT (the functional table version a
+search batch runs against): writers publish new versions; old versions are
+retired into the epoch's limbo list and freed two epochs later — the classic
+3-epoch scheme.
+"""
+from __future__ import annotations
+
+import threading
+from collections import defaultdict
+from typing import Any, Callable, Optional
+
+
+class EpochManager:
+    def __init__(self, reclaim: Optional[Callable[[Any], None]] = None):
+        self._lock = threading.Lock()
+        self.global_epoch = 0
+        self._active = defaultdict(int)        # epoch -> active readers
+        self._limbo = defaultdict(list)        # retire epoch -> payloads
+        self._reclaim = reclaim or (lambda obj: None)
+        self.reclaimed = 0
+
+    # -- readers -----------------------------------------------------------
+
+    def enter(self) -> int:
+        with self._lock:
+            e = self.global_epoch
+            self._active[e] += 1
+            return e
+
+    def exit(self, epoch: int):
+        with self._lock:
+            self._active[epoch] -= 1
+            if self._active[epoch] == 0:
+                del self._active[epoch]
+            self._try_advance_locked()
+
+    class _Guard:
+        def __init__(self, mgr):
+            self.mgr = mgr
+
+        def __enter__(self):
+            self.epoch = self.mgr.enter()
+            return self.epoch
+
+        def __exit__(self, *exc):
+            self.mgr.exit(self.epoch)
+
+    def pin(self) -> "_Guard":
+        """with epochs.pin(): ... — lock-free read critical section."""
+        return self._Guard(self)
+
+    # -- writers -----------------------------------------------------------
+
+    def retire(self, obj: Any):
+        """Queue an old snapshot/segment for reclamation once safe."""
+        with self._lock:
+            self._limbo[self.global_epoch].append(obj)
+            self._try_advance_locked()
+
+    def _try_advance_locked(self):
+        # advance when no reader is pinned at or before the current epoch;
+        # reclaim limbo entries 2 epochs old (nobody can reference them)
+        if not self._active or min(self._active) >= self.global_epoch:
+            self.global_epoch += 1
+        safe = self.global_epoch - 2
+        for e in [e for e in self._limbo if e <= safe]:
+            for obj in self._limbo.pop(e):
+                self._reclaim(obj)
+                self.reclaimed += 1
+
+    def flush(self):
+        """Reclaim everything (quiescent point: e.g. engine shutdown)."""
+        with self._lock:
+            assert not self._active, "readers still pinned"
+            self.global_epoch += 3
+            for e in list(self._limbo):
+                for obj in self._limbo.pop(e):
+                    self._reclaim(obj)
+                    self.reclaimed += 1

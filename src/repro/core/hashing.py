@@ -1,0 +1,145 @@
+"""32-bit-pair hashing for Dash on TPU.
+
+The paper uses GCC's ``std::_Hash_bytes`` (Murmur) over 8-byte keys and draws
+every address from the single 64-bit hash: directory index from the MSBs
+(Dash addresses segments by MSBs, Sec. 4.7), in-segment bucket index from the
+next bits, and the fingerprint from the least-significant byte.
+
+JAX on TPU prefers 32-bit lanes (and we avoid the global ``jax_enable_x64``
+switch because it changes default dtypes for the whole model stack), so a
+64-bit key is carried as a ``(hi, lo)`` uint32 pair and we derive two
+independent 32-bit hashes:
+
+    h1 = mix(hi, lo, SEED1)   -> segment/bucket addressing (MSB-first)
+    h2 = mix(hi, lo, SEED2)   -> fingerprint byte (+ spare bits)
+
+``mix`` is a murmur3-style finalizer — cheap (shifts/xors/mults, all VPU
+friendly), avalanching, and identical in numpy/jnp so tests can cross-check.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+SEED1 = np.uint32(0x9E3779B9)  # golden-ratio seed for addressing hash
+SEED2 = np.uint32(0x85EBCA6B)  # murmur constant seed for fingerprint hash
+
+_C1 = 0x85EBCA6B
+_C2 = 0xC2B2AE35
+_MASK32 = 0xFFFFFFFF
+
+
+def _mix32(h):
+    """Murmur3 fmix32 finalizer (jnp uint32)."""
+    h = h.astype(jnp.uint32)
+    h = h ^ (h >> 16)
+    h = h * jnp.uint32(_C1)
+    h = h ^ (h >> 13)
+    h = h * jnp.uint32(_C2)
+    h = h ^ (h >> 16)
+    return h
+
+
+def hash_pair(key_hi, key_lo, seed):
+    """Hash a (hi, lo) uint32 key pair into one uint32 with a boost-style combine."""
+    key_hi = jnp.asarray(key_hi, jnp.uint32)
+    key_lo = jnp.asarray(key_lo, jnp.uint32)
+    seed = jnp.uint32(seed)
+    h = _mix32(key_lo ^ seed)
+    # hash_combine: h ^= mix(hi) + golden + (h<<6) + (h>>2)
+    h = h ^ (_mix32(key_hi + seed) + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2))
+    return _mix32(h)
+
+
+def hash1(key_hi, key_lo):
+    """Addressing hash: directory/segment/bucket bits are drawn MSB-first."""
+    return hash_pair(key_hi, key_lo, SEED1)
+
+
+def hash2(key_hi, key_lo):
+    """Fingerprint hash: low byte is the fingerprint (paper Sec. 4.2)."""
+    return hash_pair(key_hi, key_lo, SEED2)
+
+
+def fingerprint(h2):
+    """Least-significant byte of the fingerprint hash, as uint8."""
+    return (h2 & jnp.uint32(0xFF)).astype(jnp.uint8)
+
+
+# ---------------------------------------------------------------------------
+# numpy mirrors (bit-exact) — used by tests and host-side tooling.
+# ---------------------------------------------------------------------------
+
+def _np_mix32(h):
+    h = np.asarray(h, dtype=np.uint64) & _MASK32
+    h ^= h >> np.uint64(16)
+    h = (h * np.uint64(_C1)) & _MASK32
+    h ^= h >> np.uint64(13)
+    h = (h * np.uint64(_C2)) & _MASK32
+    h ^= h >> np.uint64(16)
+    return h & _MASK32
+
+
+def np_hash_pair(key_hi, key_lo, seed):
+    key_hi = np.asarray(key_hi, dtype=np.uint64) & _MASK32
+    key_lo = np.asarray(key_lo, dtype=np.uint64) & _MASK32
+    seed = np.uint64(int(seed))
+    h = _np_mix32(key_lo ^ seed)
+    h ^= (_np_mix32((key_hi + seed) & _MASK32) + np.uint64(0x9E3779B9)
+          + ((h << np.uint64(6)) & _MASK32) + (h >> np.uint64(2))) & _MASK32
+    h &= _MASK32
+    return _np_mix32(h).astype(np.uint32)
+
+
+def np_hash1(key_hi, key_lo):
+    return np_hash_pair(key_hi, key_lo, int(SEED1))
+
+
+def np_hash2(key_hi, key_lo):
+    return np_hash_pair(key_hi, key_lo, int(SEED2))
+
+
+def fold_words(words, seed):
+    """Fold a (..., W) uint32 word array into one uint32 per row (jnp).
+
+    Used by pointer mode (variable-length keys, Sec. 4.5): the (hi, lo)
+    identity of a long key is (fold(words, SEED1'), fold(words, SEED2')).
+    """
+    words = jnp.asarray(words, jnp.uint32)
+    h = jnp.full(words.shape[:-1], jnp.uint32(seed))
+    for i in range(words.shape[-1]):
+        h = _mix32(h ^ words[..., i]) + jnp.uint32(0x9E3779B9) + (h << 6) + (h >> 2)
+    return _mix32(h)
+
+
+def np_fold_words(words, seed):
+    words = np.asarray(words, dtype=np.uint64) & _MASK32
+    h = np.full(words.shape[:-1], np.uint64(int(seed)), dtype=np.uint64)
+    for i in range(words.shape[-1]):
+        h = (_np_mix32(h ^ words[..., i]) + np.uint64(0x9E3779B9)
+             + ((h << np.uint64(6)) & _MASK32) + (h >> np.uint64(2))) & _MASK32
+    return _np_mix32(h).astype(np.uint32)
+
+
+FOLD_SEED_HI = 0xDEADBEEF
+FOLD_SEED_LO = 0x12345678
+
+
+def key_identity_from_words(words):
+    """(hi, lo) uint32 identity pair for a variable-length key (jnp)."""
+    return fold_words(words, FOLD_SEED_HI), fold_words(words, FOLD_SEED_LO)
+
+
+def np_key_identity_from_words(words):
+    return np_fold_words(words, FOLD_SEED_HI), np_fold_words(words, FOLD_SEED_LO)
+
+
+def split_key(key64: int):
+    """Split a python int key (< 2**64) into (hi, lo) uint32."""
+    key64 = int(key64) & 0xFFFFFFFFFFFFFFFF
+    return np.uint32(key64 >> 32), np.uint32(key64 & _MASK32)
+
+
+def np_split_keys(keys64: np.ndarray):
+    keys64 = np.asarray(keys64, dtype=np.uint64)
+    return (keys64 >> np.uint64(32)).astype(np.uint32), (keys64 & np.uint64(_MASK32)).astype(np.uint32)

@@ -1,0 +1,277 @@
+"""Dash table memory layout for TPU: packed metadata words + state pytree.
+
+Mirrors the paper's bucket layout (Fig. 4) with TPU-native array planes:
+
+  - a bucket has ``num_slots`` (default 14) record slots,
+  - a contiguous fingerprint plane (1 byte/slot, padded to 16 lanes),
+  - 4 overflow fingerprints ("ofp") summarizing this bucket's records that
+    overflowed into the segment's stash buckets,
+  - one *packed* 32-bit metadata word per bucket — the atomic publish point
+    (alloc bitmap | membership bitmap | count), exactly the word Dash persists
+    with a single CLWB (Alg. 2 line 16),
+  - one packed overflow-metadata word ("ometa"),
+  - a version word per bucket (bit 0 = lock bit, bits 1.. = version) for the
+    optimistic-concurrency analog (Sec. 4.4).
+
+A segment is ``num_buckets`` normal buckets followed by ``num_stash`` stash
+buckets (same layout, paper Sec. 4.3). All segments live in one preallocated
+pool (PM pool analog); "allocating" a segment bumps ``watermark``.
+
+The extendible-hashing directory is stored *fully expanded* at
+``2**dir_depth_max`` entries: entry ``i`` maps the ``dir_depth_max``-bit MSB
+prefix ``i`` of ``h1`` to a physical segment id. Doubling the directory is
+then metadata-only (``global_depth += 1``) and a segment split updates a
+contiguous prefix range of entries — the TPU adaptation of "directory entries
+pointing to the same segment are co-located under MSB addressing" (Sec. 4.7).
+
+Feature flags reproduce the paper's ablation stack (Fig. 11): plain
+bucketized -> +linear probing -> +balanced insert/displacement -> +stash,
+and express the CCEH baseline (4 slots, probe-4, no fp/stash) in the same
+engine so comparisons isolate the algorithm.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax.numpy as jnp
+import numpy as np
+
+# Status codes returned by mutating ops.
+INSERTED = 0
+EXISTS = 1
+NEED_SPLIT = 2     # no room even in stash: host must split and retry
+DROPPED = 3        # insert_nosplit only: record dropped (counted)
+NOT_FOUND = 4      # delete/update of an absent key
+
+# Segment SMO states (Sec. 4.7).
+SEG_NORMAL = 0
+SEG_SPLITTING = 1
+SEG_NEW = 2
+
+U32 = jnp.uint32
+_ONE = np.uint32(1)
+
+
+@dataclasses.dataclass(frozen=True)
+class DashConfig:
+    """Static configuration (hashable; safe as a jit static arg)."""
+    num_buckets: int = 64          # normal buckets / segment (power of 2)
+    num_stash: int = 2             # stash buckets / segment (0 disables stashing)
+    num_slots: int = 14            # record slots / bucket (<= 14: count fits 4 bits... 15 ok too)
+    num_ofp: int = 4               # overflow fingerprint slots / bucket
+    max_segments: int = 64         # preallocated segment pool size
+    dir_depth_max: int = 12        # fully-expanded directory = 2**this entries
+    init_depth: int = 1            # initial global/local depth (EH); init segs = 2**this
+    # --- feature flags (paper Fig. 11 ablation stack) ---
+    use_fingerprints: bool = True
+    use_balanced: bool = True      # balanced insert (b vs b+1, pick emptier)
+    use_displacement: bool = True
+    use_overflow_meta: bool = True # Fig. 10: off => every probe scans stash
+    probe_len: int = 2             # insert/search window when balanced=False (CCEH uses 4)
+    # --- LH-specific ---
+    lh_base_log2: int = 2          # N0 = 2**this initial segments for linear hashing
+    lh_base_stash: int = 2         # fixed stash buckets before chaining (Sec. 5.1)
+    # --- misc ---
+    pointer_mode: bool = False     # variable-length keys via key-heap handles
+    key_heap_size: int = 0         # number of key-heap entries (pointer mode)
+    key_heap_words: int = 4        # u32 words per heap key (16 bytes default)
+
+    def __post_init__(self):
+        assert self.num_buckets & (self.num_buckets - 1) == 0, "num_buckets must be pow2"
+        assert 1 <= self.num_slots <= 14
+        assert 0 <= self.num_ofp <= 4
+        assert self.init_depth <= self.dir_depth_max
+
+    @property
+    def buckets_total(self) -> int:
+        return self.num_buckets + self.num_stash
+
+    @property
+    def bucket_bits(self) -> int:
+        return int(np.log2(self.num_buckets))
+
+    @property
+    def dir_size(self) -> int:
+        return 1 << self.dir_depth_max
+
+    @property
+    def seg_capacity(self) -> int:
+        return self.buckets_total * self.num_slots
+
+    def bytes_per_segment(self) -> int:
+        bt, ns = self.buckets_total, self.num_slots
+        return bt * 16 + self.num_buckets * 4 + bt * ns * 12 + bt * 12  # fp+ofp+records+words
+
+
+# --- packed word: meta = alloc(14 bits) | membership(14 bits) | count(4 bits) ---
+ALLOC_SHIFT, MEMBER_SHIFT, COUNT_SHIFT = 0, 14, 28
+SLOT_MASK = (1 << 14) - 1
+
+
+def meta_alloc(meta):
+    return (meta >> ALLOC_SHIFT) & U32(SLOT_MASK)
+
+
+def meta_member(meta):
+    return (meta >> MEMBER_SHIFT) & U32(SLOT_MASK)
+
+
+def meta_count(meta):
+    return (meta >> COUNT_SHIFT) & U32(0xF)
+
+
+def meta_pack(alloc, member, count):
+    return (alloc.astype(U32) << ALLOC_SHIFT) | (member.astype(U32) << MEMBER_SHIFT) | (
+        count.astype(U32) << COUNT_SHIFT)
+
+
+# --- packed word: ometa = ofp_alloc(4) | ofp_member(4) | stash_idx(2b x4) | ovf_cnt(7) | ovf_bit(1) ---
+OFPA_SHIFT, OFPM_SHIFT, SIDX_SHIFT, OVFC_SHIFT, OVFB_SHIFT = 0, 4, 8, 16, 23
+
+
+def ometa_ofp_alloc(om):
+    return (om >> OFPA_SHIFT) & U32(0xF)
+
+
+def ometa_ofp_member(om):
+    return (om >> OFPM_SHIFT) & U32(0xF)
+
+
+def ometa_stash_idx(om, slot):
+    return (om >> (U32(SIDX_SHIFT) + U32(2) * slot.astype(U32))) & U32(0x3)
+
+
+def ometa_ovf_count(om):
+    return (om >> OVFC_SHIFT) & U32(0x7F)
+
+
+def ometa_ovf_bit(om):
+    return (om >> OVFB_SHIFT) & U32(1)
+
+
+def ometa_set_stash_idx(om, slot, sidx):
+    sh = U32(SIDX_SHIFT) + U32(2) * slot.astype(U32)
+    return (om & ~(U32(0x3) << sh)) | ((sidx.astype(U32) & U32(0x3)) << sh)
+
+
+class DashState(NamedTuple):
+    """The whole table as a pytree of arrays (one 'PM pool')."""
+    # record planes: [max_segments, buckets_total, ...]
+    fp: jnp.ndarray        # (S, BT, 16) uint8 — slot fingerprints (padded)
+    ofp: jnp.ndarray       # (S, NB, 4)  uint8 — overflow fingerprints
+    key_hi: jnp.ndarray    # (S, BT, SLOTS) uint32
+    key_lo: jnp.ndarray    # (S, BT, SLOTS) uint32
+    val: jnp.ndarray       # (S, BT, SLOTS) uint32 (opaque payload / heap handle)
+    meta: jnp.ndarray      # (S, BT) uint32 packed — atomic publish word
+    ometa: jnp.ndarray     # (S, NB) uint32 packed
+    version: jnp.ndarray   # (S, BT) uint32 — bit0 lock, bits1.. version
+    # segment metadata
+    local_depth: jnp.ndarray   # (S,) int32
+    seg_state: jnp.ndarray     # (S,) int32 {NORMAL, SPLITTING, NEW}
+    side_link: jnp.ndarray     # (S,) int32 right-neighbor chain (-1 = none)
+    seg_version: jnp.ndarray   # (S,) uint32 lazy-recovery version
+    # directory / global metadata
+    dir: jnp.ndarray           # (2**dir_depth_max,) int32 fully-expanded MSB directory
+    global_depth: jnp.ndarray  # () int32
+    watermark: jnp.ndarray     # () int32 — segment pool allocation bump pointer
+    clean: jnp.ndarray         # () bool_ — clean-shutdown marker (Sec. 4.8)
+    gver: jnp.ndarray          # () uint32 — global recovery version V
+    lh_word: jnp.ndarray       # () uint32 — LH: level(8) | next(24), one atomic word (Sec. 5.3)
+    lh_dir: jnp.ndarray        # (S,) int32 — LH logical seg -> physical (hybrid-expansion map)
+    stash_active: jnp.ndarray  # (S,) int32 — LH: active stash buckets (chain length analog)
+    # stats
+    n_items: jnp.ndarray       # () int32
+    n_splits: jnp.ndarray      # () int32
+    n_doublings: jnp.ndarray   # () int32
+    key_heap: jnp.ndarray      # (H, W) uint32 or (0,0) — variable-length key storage
+    heap_top: jnp.ndarray      # () int32
+
+
+def make_state(cfg: DashConfig, mode: str = "eh") -> DashState:
+    """Fresh table. mode: 'eh' (2**init_depth segments) or 'lh' (N0 segments)."""
+    S, BT, NB, NS = cfg.max_segments, cfg.buckets_total, cfg.num_buckets, cfg.num_slots
+    if mode == "eh":
+        n_init = 1 << cfg.init_depth
+        dir0 = np.repeat(np.arange(n_init, dtype=np.int32), cfg.dir_size // n_init)
+        gd = cfg.init_depth
+    elif mode == "lh":
+        n_init = 1 << cfg.lh_base_log2
+        dir0 = np.zeros(cfg.dir_size, dtype=np.int32)  # unused by LH addressing
+        gd = 0
+    else:
+        raise ValueError(mode)
+    assert n_init <= S
+    heap_h = cfg.key_heap_size if cfg.pointer_mode else 1
+    lh_dir = np.full(S, -1, dtype=np.int32)
+    lh_dir[:n_init] = np.arange(n_init)
+    return DashState(
+        fp=jnp.zeros((S, BT, 16), jnp.uint8),
+        ofp=jnp.zeros((S, NB, 4), jnp.uint8),
+        key_hi=jnp.zeros((S, BT, NS), U32),
+        key_lo=jnp.zeros((S, BT, NS), U32),
+        val=jnp.zeros((S, BT, NS), U32),
+        meta=jnp.zeros((S, BT), U32),
+        ometa=jnp.zeros((S, NB), U32),
+        version=jnp.zeros((S, BT), U32),
+        local_depth=jnp.full((S,), gd if mode == "eh" else 0, jnp.int32),
+        seg_state=jnp.zeros((S,), jnp.int32),
+        side_link=jnp.full((S,), -1, jnp.int32),
+        seg_version=jnp.ones((S,), U32),
+        dir=jnp.asarray(dir0),
+        global_depth=jnp.asarray(gd, jnp.int32),
+        watermark=jnp.asarray(n_init, jnp.int32),
+        clean=jnp.asarray(True),
+        gver=jnp.asarray(1, U32),
+        lh_word=jnp.asarray(0, U32),
+        lh_dir=jnp.asarray(lh_dir),
+        stash_active=jnp.full((S,), min(cfg.num_stash, cfg.lh_base_stash)
+                              if mode == "lh" else cfg.num_stash, jnp.int32),
+        n_items=jnp.asarray(0, jnp.int32),
+        n_splits=jnp.asarray(0, jnp.int32),
+        n_doublings=jnp.asarray(0, jnp.int32),
+        key_heap=jnp.zeros((heap_h, cfg.key_heap_words), U32),
+        heap_top=jnp.asarray(0, jnp.int32),
+    )
+
+
+# --- addressing -------------------------------------------------------------
+
+def dir_index(cfg: DashConfig, h1):
+    """MSB prefix of h1 at the fully-expanded directory resolution."""
+    return (h1 >> U32(32 - cfg.dir_depth_max)).astype(jnp.int32)
+
+
+def bucket_index(cfg: DashConfig, h1):
+    """In-segment bucket from the LSBs of h1 (as in the Dash implementation)."""
+    return (h1 & U32(cfg.num_buckets - 1)).astype(jnp.int32)
+
+
+def lh_level_next(lh_word):
+    return (lh_word >> U32(24)).astype(jnp.int32), (lh_word & U32(0xFFFFFF)).astype(jnp.int32)
+
+
+def lh_pack(level, nxt):
+    return (level.astype(U32) << U32(24)) | (nxt.astype(U32) & U32(0xFFFFFF))
+
+
+def lh_logical_segment(cfg: DashConfig, h1, lh_word):
+    """Classic LH addressing with power-of-2 rounds: seg = h mod N0*2^l,
+    re-hash with next round's mask if already split this round."""
+    level, nxt = lh_level_next(lh_word)
+    mask_lo = (U32(1) << (U32(cfg.lh_base_log2) + level.astype(U32))) - U32(1)
+    seg = (h1 & mask_lo).astype(jnp.int32)
+    mask_hi = (mask_lo << U32(1)) | U32(1)
+    seg2 = (h1 & mask_hi).astype(jnp.int32)
+    return jnp.where(seg < nxt, seg2, seg)
+
+
+def lh_bucket_index(cfg: DashConfig, h1):
+    """LH bucket bits live above the segment bits (independent for l<=24-6)."""
+    return ((h1 >> U32(24)) & U32(cfg.num_buckets - 1)).astype(jnp.int32)
+
+
+def load_factor(cfg: DashConfig, state: DashState):
+    """records stored / capacity of *allocated* segments (paper's metric)."""
+    return state.n_items.astype(jnp.float32) / (
+        state.watermark.astype(jnp.float32) * cfg.seg_capacity)

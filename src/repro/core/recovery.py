@@ -1,0 +1,253 @@
+"""Crash simulation + instant/lazy recovery (paper Sec. 4.8).
+
+Instant recovery is a *constant* amount of work: read the ``clean`` marker and
+possibly bump the one-byte global version ``V``. All real work (clearing
+locks, removing duplicate records left by in-flight displacements, rebuilding
+the non-persisted overflow metadata, finishing or rolling back SMOs) is
+deferred to the first access of each segment (``seg_version != V``).
+
+The crash simulator produces exactly the artifact classes the paper's
+recovery handles:
+  * locked buckets (lock bit left set),
+  * duplicated records (displacement step 1 done, step 2 lost),
+  * wiped overflow metadata (paper: "we do not explicitly persist it"),
+  * an in-flight SMO (segment in SPLITTING with a NEW side-linked neighbor).
+"""
+from __future__ import annotations
+
+import functools
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import bucket as bk
+from . import engine, hashing, layout
+from .layout import (SEG_NEW, SEG_NORMAL, SEG_SPLITTING, DashConfig,
+                     DashState, U32)
+
+I32 = jnp.int32
+
+
+# ---------------------------------------------------------------------------
+# instant restart — O(1) regardless of table size (Table 1's 57 ms analog)
+# ---------------------------------------------------------------------------
+
+def instant_restart(state: DashState):
+    """Read ``clean``; bump ``V`` if the shutdown was dirty. Nothing else."""
+    t0 = time.perf_counter()
+    was_clean = bool(np.asarray(state.clean))
+    if was_clean:
+        state = state._replace(clean=jnp.asarray(False))
+    else:
+        state = state._replace(gver=state.gver + U32(1))
+    return state, {"clean": was_clean, "seconds": time.perf_counter() - t0}
+
+
+# ---------------------------------------------------------------------------
+# per-segment lazy recovery (jitted data plane)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2,))
+def recover_segment(cfg: DashConfig, mode: str, state: DashState, seg):
+    """Steps 1–3 of Sec. 4.8 for one segment: clear locks, dedupe displaced
+    records, rebuild overflow metadata. SMO continuation (step 4) is
+    orchestrated by the host (recover_segment_host)."""
+    NB, BT, SL = cfg.num_buckets, cfg.buckets_total, cfg.num_slots
+
+    # (1) clear lock bits
+    ver = jax.lax.dynamic_slice(state.version, (seg, 0), (1, BT))[0]
+    state = state._replace(version=jax.lax.dynamic_update_slice(
+        state.version, ((ver & ~U32(1)) + U32(2))[None], (seg, 0)))
+
+    # (2) dedupe: a displaced record can appear in adjacent buckets (b, b+1);
+    # fingerprints prefilter, full key compare confirms (both cheap here)
+    hi = jax.lax.dynamic_slice(state.key_hi, (seg, 0, 0), (1, BT, SL))[0]
+    lo = jax.lax.dynamic_slice(state.key_lo, (seg, 0, 0), (1, BT, SL))[0]
+    meta = jax.lax.dynamic_slice(state.meta, (seg, 0), (1, BT))[0]
+    slot_ids = jnp.arange(SL, dtype=U32)[None, :]
+    alloc = ((layout.meta_alloc(meta)[:, None] >> slot_ids) & U32(1)) == 1
+    member = ((layout.meta_member(meta)[:, None] >> slot_ids) & U32(1)) == 1
+
+    nb_idx = jnp.arange(NB)
+    nxt = (nb_idx + 1) % NB
+    eq = ((hi[:NB][:, :, None] == hi[nxt][:, None, :])
+          & (lo[:NB][:, :, None] == lo[nxt][:, None, :])
+          & alloc[:NB][:, :, None] & alloc[nxt][:, None, :])
+    dup_next = jnp.any(eq, axis=1)                       # (NB, SL) dup in bucket nxt[b]
+    dup = jnp.zeros((BT, SL), jnp.bool_).at[nxt].set(dup_next)
+
+    new_alloc = alloc & ~dup
+    new_member = member & ~dup
+    counts = jnp.sum(new_alloc, axis=1).astype(U32)
+    packed = layout.meta_pack(
+        jnp.sum(new_alloc.astype(U32) << slot_ids, axis=1),
+        jnp.sum(new_member.astype(U32) << slot_ids, axis=1),
+        counts)
+    state = state._replace(meta=jax.lax.dynamic_update_slice(
+        state.meta, packed[None], (seg, 0)))
+
+    # (3) rebuild overflow metadata from stash contents
+    state = state._replace(
+        ometa=jax.lax.dynamic_update_slice(
+            state.ometa, jnp.zeros((1, NB), U32), (seg, 0)),
+        ofp=jax.lax.dynamic_update_slice(
+            state.ofp, jnp.zeros((1, NB, 4), jnp.uint8), (seg, 0, 0)),
+    )
+    if cfg.num_stash > 0:
+        s_ids = jnp.repeat(jnp.arange(cfg.num_stash), SL)
+        slot_flat = jnp.tile(jnp.arange(SL), cfg.num_stash)
+
+        def step(st, xs):
+            s_j, sl = xs
+            sb = NB + s_j
+            a = (layout.meta_alloc(st.meta[seg, sb]) >> sl.astype(U32)) & U32(1)
+            r_hi, r_lo = st.key_hi[seg, sb, sl], st.key_lo[seg, sb, sl]
+            h1, h2 = engine.record_hashes(cfg, st, r_hi[None], r_lo[None])
+            h1, h2 = h1[0], h2[0]
+            if mode == "eh":
+                b = layout.bucket_index(cfg, h1)
+            else:
+                b = layout.lh_bucket_index(cfg, h1)
+            fpv = hashing.fingerprint(h2)
+
+            def do(s):
+                s1, ok1 = bk.ofp_try_set(cfg, s, seg, b, fpv, s_j, member=False)
+
+                def try_prob(_):
+                    pb = (b + 1) & (NB - 1)
+                    s2, ok2 = bk.ofp_try_set(cfg, s1, seg, pb, fpv, s_j, member=True)
+                    s3 = bk.ovf_count_add(s2, seg, b, 1)
+                    return jax.lax.cond(ok2, lambda q: q[0], lambda q: q[1], (s2, s3))
+
+                return jax.lax.cond(ok1, lambda _: s1, try_prob, None)
+
+            st = jax.lax.cond(a == 1, do, lambda s: s, st)
+            return st, ()
+
+        state, _ = jax.lax.scan(step, state, (s_ids, slot_flat))
+
+    state = state._replace(
+        seg_version=state.seg_version.at[seg].set(state.gver),
+        n_items=engine.recount_items(state),
+    )
+    return state
+
+
+def recover_segment_host(cfg: DashConfig, mode: str, state: DashState, seg: int):
+    """Step 4 orchestration: finish or roll back an in-flight SMO, then run
+    the jitted per-segment recovery."""
+    from . import dash_eh  # local import to avoid cycle
+
+    seg_states = np.asarray(state.seg_state)
+    side = np.asarray(state.side_link)
+
+    if mode == "eh" and seg_states[seg] == SEG_NEW:
+        # recover from the SPLITTING source side (it redoes the rehash)
+        srcs = np.where((side == seg) & (seg_states == SEG_SPLITTING))[0]
+        if srcs.size:
+            return recover_segment_host(cfg, mode, state, int(srcs[0]))
+
+    if mode == "eh" and seg_states[seg] == SEG_SPLITTING:
+        nbr = int(side[seg])
+        if nbr >= 0 and seg_states[nbr] == SEG_NEW:
+            # continue the split: phase 2 is idempotent (uniqueness-checked)
+            state, ok = dash_eh.split_phase2(
+                cfg, state, jnp.asarray(seg, jnp.int32), jnp.asarray(nbr, jnp.int32),
+                True)
+            assert bool(ok)
+        else:
+            # roll back: reset the state variable (paper Sec. 4.8)
+            state = state._replace(
+                seg_state=state.seg_state.at[seg].set(SEG_NORMAL),
+                local_depth=state.local_depth.at[seg].add(-1),
+            )
+
+    return recover_segment(cfg, mode, state, jnp.asarray(seg, jnp.int32))
+
+
+def recover_all(cfg: DashConfig, mode: str, state: DashState):
+    """Eager full recovery (used by benchmarks as the 'CCEH-style' contrast
+    and by tests to reach a known-good state)."""
+    wm = int(np.asarray(state.watermark))
+    for seg in range(wm):
+        state = recover_segment_host(cfg, mode, state, seg)
+    return state
+
+
+# ---------------------------------------------------------------------------
+# crash simulation (host-side, numpy surgery on the state)
+# ---------------------------------------------------------------------------
+
+def simulate_crash(cfg: DashConfig, mode: str, state: DashState,
+                   rng: np.random.Generator, lock_frac: float = 0.05,
+                   n_dups: int = 4, wipe_overflow: bool = True,
+                   interrupt_smo: bool = False) -> DashState:
+    from . import dash_eh
+
+    wm = int(np.asarray(state.watermark))
+    NB, SL = cfg.num_buckets, cfg.num_slots
+
+    version = np.asarray(state.version).copy()
+    n_lock = max(1, int(lock_frac * wm * cfg.buckets_total))
+    segs = rng.integers(0, wm, n_lock)
+    bks = rng.integers(0, cfg.buckets_total, n_lock)
+    version[segs, bks] |= 1                     # locks left held
+
+    fp = np.asarray(state.fp).copy()
+    key_hi = np.asarray(state.key_hi).copy()
+    key_lo = np.asarray(state.key_lo).copy()
+    val = np.asarray(state.val).copy()
+    meta = np.asarray(state.meta).copy()
+
+    made = 0
+    for _ in range(n_dups * 20):
+        if made >= n_dups:
+            break
+        s = int(rng.integers(0, wm))
+        b = int(rng.integers(0, NB))
+        alloc = int(meta[s, b]) & layout.SLOT_MASK
+        occupied = [i for i in range(SL) if alloc >> i & 1]
+        if not occupied:
+            continue
+        i = occupied[int(rng.integers(0, len(occupied)))]
+        nb = (b + 1) % NB
+        alloc_n = int(meta[s, nb]) & layout.SLOT_MASK
+        free = [j for j in range(SL) if not (alloc_n >> j & 1)]
+        if not free:
+            continue
+        j = free[0]
+        # displacement step 1 done (copy to neighbor, membership set),
+        # step 2 (delete from source) lost in the crash:
+        key_hi[s, nb, j] = key_hi[s, b, i]
+        key_lo[s, nb, j] = key_lo[s, b, i]
+        val[s, nb, j] = val[s, b, i]
+        fp[s, nb, j] = fp[s, b, i]
+        m = int(meta[s, nb])
+        alloc_n |= 1 << j
+        memb = ((m >> layout.MEMBER_SHIFT) & layout.SLOT_MASK) | (1 << j)
+        cnt = ((m >> layout.COUNT_SHIFT) & 0xF) + 1
+        meta[s, nb] = (alloc_n | (memb << layout.MEMBER_SHIFT)
+                       | (cnt << layout.COUNT_SHIFT))
+        made += 1
+
+    new = state._replace(
+        version=jnp.asarray(version),
+        fp=jnp.asarray(fp), key_hi=jnp.asarray(key_hi),
+        key_lo=jnp.asarray(key_lo), val=jnp.asarray(val),
+        meta=jnp.asarray(meta),
+        clean=jnp.asarray(False),
+    )
+    if wipe_overflow:
+        new = new._replace(
+            ometa=jnp.zeros_like(new.ometa),
+            ofp=jnp.zeros_like(new.ofp),
+        )
+    if interrupt_smo and mode == "eh" and wm < cfg.max_segments:
+        depths = np.asarray(new.local_depth)
+        candidates = [s for s in range(wm) if depths[s] < cfg.dir_depth_max]
+        if candidates:
+            victim = int(rng.choice(candidates))
+            new, _ = dash_eh.split_phase1(cfg, new, jnp.asarray(victim, jnp.int32))
+    return new

@@ -1,0 +1,254 @@
+"""Host-facing Dash tables: batch orchestration + split retry + lazy recovery.
+
+The device does the data-plane work (batched probes/inserts, SMOs); the host
+plays the role of the paper's "goto retry" loops (Alg. 1 line 31): when a
+batch reports NEED_SPLIT, the host runs the SMO and retries the failed subset.
+Per-segment lazy recovery (Sec. 4.8) also hooks in here: before touching a
+segment whose version mismatches the global V, the accessing *batch* recovers
+it — amortizing recovery over runtime exactly as the paper does over accesses.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import numpy as np
+import jax.numpy as jnp
+
+from . import dash_eh, dash_lh, engine, hashing, layout, recovery
+from .layout import (EXISTS, INSERTED, NEED_SPLIT, NOT_FOUND, DashConfig,
+                     DashState)
+
+
+class TableFullError(RuntimeError):
+    pass
+
+
+class DashTable:
+    """Shared host logic; subclasses define addressing + pressure handling."""
+
+    mode: str = "eh"
+
+    def __init__(self, cfg: DashConfig, lazy_recovery: bool = True):
+        self.cfg = cfg
+        self.state: DashState = layout.make_state(cfg, self.mode)
+        self.lazy_recovery = lazy_recovery
+        self.recovered_segments = 0   # stat: lazy recoveries performed
+        self.free_segments: list = []  # merged-away ids, recycled by splits
+
+    # -- key plumbing --------------------------------------------------------
+
+    def _split_keys(self, keys):
+        keys = np.asarray(keys, dtype=np.uint64)
+        hi, lo = hashing.np_split_keys(keys)
+        return jnp.asarray(hi), jnp.asarray(lo), None
+
+    def _key_words(self, words):
+        """Pointer mode: keys come as (n, W) uint32 padded word rows."""
+        words = np.asarray(words, dtype=np.uint32)
+        assert words.shape[1] == self.cfg.key_heap_words
+        hi = hashing.np_fold_words(words, hashing.FOLD_SEED_HI)
+        lo = hashing.np_fold_words(words, hashing.FOLD_SEED_LO)
+        return jnp.asarray(hi), jnp.asarray(lo), jnp.asarray(words)
+
+    def _prep(self, keys=None, words=None):
+        if self.cfg.pointer_mode:
+            assert words is not None, "pointer mode takes `words` (n, W) uint32"
+            return self._key_words(words)
+        return self._split_keys(keys)
+
+    # -- lazy recovery hook (Sec. 4.8) ----------------------------------------
+
+    def _touched_segments(self, hi, lo) -> np.ndarray:
+        h1 = hashing.np_hash1(np.asarray(hi), np.asarray(lo))
+        if self.mode == "eh":
+            dirv = np.asarray(self.state.dir)
+            return np.unique(dirv[h1 >> np.uint32(32 - self.cfg.dir_depth_max)])
+        word = int(np.asarray(self.state.lh_word))
+        level, nxt = word >> 24, word & 0xFFFFFF
+        mask_lo = (1 << (self.cfg.lh_base_log2 + level)) - 1
+        seg = (h1 & np.uint32(mask_lo)).astype(np.int64)
+        mask_hi = (mask_lo << 1) | 1
+        seg2 = (h1 & np.uint32(mask_hi)).astype(np.int64)
+        logical = np.where(seg < nxt, seg2, seg)
+        return np.unique(np.asarray(self.state.lh_dir)[logical])
+
+    def _ensure_recovered(self, hi, lo):
+        if not self.lazy_recovery:
+            return
+        gver = int(np.asarray(self.state.gver))
+        seg_ver = np.asarray(self.state.seg_version)
+        for seg in self._touched_segments(hi, lo):
+            if seg >= 0 and int(seg_ver[seg]) != gver:
+                self.state = recovery.recover_segment_host(
+                    self.cfg, self.mode, self.state, int(seg))
+                self.recovered_segments += 1
+
+    # -- public ops -----------------------------------------------------------
+
+    def insert(self, keys=None, values=None, words=None, max_retries: int = 256):
+        hi_j, lo_j, w_j = self._prep(keys, words)
+        hi, lo = np.asarray(hi_j), np.asarray(lo_j)
+        w = None if w_j is None else np.asarray(w_j)
+        vals = np.asarray(values, dtype=np.uint32)
+        self._ensure_recovered(hi, lo)
+        out = np.full(hi.shape[0], NEED_SPLIT, dtype=np.int32)
+        pending = np.arange(hi.shape[0])
+        first = True
+        for _ in range(max_retries):
+            if first:
+                idx, valid = pending, None           # full batch, no padding
+            else:
+                # pad retry subsets to pow2 so jit shapes are reused
+                n = max(8, 1 << int(np.ceil(np.log2(max(pending.size, 1)))))
+                idx = np.concatenate([pending, np.zeros(n - pending.size, np.int64)])
+                valid = jnp.asarray(np.arange(n) < pending.size)
+            self.state, statuses, activated = engine.insert_batch(
+                self.cfg, self.mode, self.state,
+                jnp.asarray(hi[idx]), jnp.asarray(lo[idx]),
+                jnp.asarray(vals[idx]),
+                None if w is None else jnp.asarray(w[idx]), valid)
+            statuses = np.asarray(statuses)[:pending.size]
+            out[pending] = statuses
+            failed = pending[statuses == NEED_SPLIT]
+            if bool(activated):
+                self._on_pressure(None)   # LH: stash-allocation split trigger
+            if failed.size == 0:
+                return out
+            seg_hint = self._touched_segments(hi[failed], lo[failed])
+            self._on_pressure(seg_hint)
+            pending = failed
+            first = False
+        raise TableFullError("insert retry budget exhausted")
+
+    def search(self, keys=None, words=None):
+        hi, lo, w = self._prep(keys, words)
+        self._ensure_recovered(hi, lo)
+        found, vals = engine.search_batch(self.cfg, self.mode, self.state, hi, lo, w)
+        return np.asarray(found), np.asarray(vals)
+
+    def delete(self, keys=None, words=None):
+        hi, lo, w = self._prep(keys, words)
+        self._ensure_recovered(hi, lo)
+        self.state, statuses = engine.delete_batch(
+            self.cfg, self.mode, self.state, hi, lo, w)
+        return np.asarray(statuses)
+
+    def update(self, keys=None, values=None, words=None):
+        hi, lo, w = self._prep(keys, words)
+        self._ensure_recovered(hi, lo)
+        vals = jnp.asarray(np.asarray(values, dtype=np.uint32))
+        self.state, statuses = engine.update_batch(
+            self.cfg, self.mode, self.state, hi, lo, vals, w)
+        return np.asarray(statuses)
+
+    # -- lifecycle / stats ----------------------------------------------------
+
+    def graceful_shutdown(self):
+        self.state = self.state._replace(clean=jnp.asarray(True))
+
+    def restart(self):
+        """Instant recovery (Sec. 4.8): O(1) work, constant in data size."""
+        self.state, work = recovery.instant_restart(self.state)
+        return work
+
+    def crash(self, rng: Optional[np.random.Generator] = None, **kw):
+        self.state = recovery.simulate_crash(self.cfg, self.mode, self.state,
+                                             rng or np.random.default_rng(0), **kw)
+
+    @property
+    def load_factor(self) -> float:
+        return float(np.asarray(layout.load_factor(self.cfg, self.state)))
+
+    @property
+    def n_items(self) -> int:
+        return int(np.asarray(self.state.n_items))
+
+    @property
+    def n_segments(self) -> int:
+        return int(np.asarray(self.state.watermark))
+
+    def _on_pressure(self, seg_hint):
+        raise NotImplementedError
+
+
+class DashEH(DashTable):
+    """Dash extendible hashing (paper Sec. 4)."""
+
+    mode = "eh"
+
+    def _on_pressure(self, seg_hint):
+        if seg_hint is None:
+            return                      # EH ignores stash-activation signals
+        wm = int(np.asarray(self.state.watermark))
+        depths = np.asarray(self.state.local_depth)
+        for seg in np.asarray(seg_hint).reshape(-1):
+            seg = int(seg)
+            new_id = self.free_segments.pop() if self.free_segments else None
+            if new_id is None and wm >= self.cfg.max_segments:
+                raise TableFullError("segment pool exhausted")
+            if depths[seg] >= self.cfg.dir_depth_max:
+                raise TableFullError("directory depth exhausted")
+            self.state, ok = dash_eh.split_segment(self.cfg, self.state, seg,
+                                                   new_id)
+            if not bool(ok):
+                raise AssertionError("split rehash failed to refit records")
+            wm += 1
+
+    @property
+    def global_depth(self) -> int:
+        return int(np.asarray(self.state.global_depth))
+
+    def shrink(self, target_fill: float = 0.8, max_merges: int = 10**6) -> int:
+        """Merge buddy segment pairs while their combined records fit under
+        ``target_fill`` of one segment (paper Sec. 4.7: merge on low load
+        factor). Freed ids are recycled by future splits. Returns merges."""
+        cap = int(self.cfg.seg_capacity * target_fill)
+        merges = 0
+        while merges < max_merges:
+            counts = self._segment_counts()
+            dirv = np.asarray(self.state.dir)
+            live = [s for s in np.unique(dirv)
+                    if s not in self.free_segments]
+            done = True
+            for seg in sorted(live, key=lambda s: counts[s]):
+                buddy = dash_eh.find_buddy(self.cfg, self.state, int(seg))
+                if buddy is None:
+                    continue
+                if counts[seg] + counts[buddy] <= cap:
+                    self.state, ok = dash_eh.merge_segments(
+                        self.cfg, self.state, int(buddy), int(seg))
+                    assert bool(ok)
+                    self.free_segments.append(int(seg))
+                    merges += 1
+                    done = False
+                    break
+            if done:
+                return merges
+        return merges
+
+    def _segment_counts(self) -> np.ndarray:
+        meta = np.asarray(self.state.meta)
+        return ((meta >> layout.COUNT_SHIFT) & 0xF).sum(axis=1)
+
+
+class DashLH(DashTable):
+    """Dash linear hashing (paper Sec. 5)."""
+
+    mode = "lh"
+
+    def _on_pressure(self, seg_hint):
+        wm = int(np.asarray(self.state.watermark))
+        if wm >= self.cfg.max_segments:
+            raise TableFullError("segment pool exhausted")
+        word = int(np.asarray(self.state.lh_word))
+        level, nxt = word >> 24, word & 0xFFFFFF
+        new_logical = (1 << self.cfg.lh_base_log2) * (1 << level) + nxt
+        if new_logical >= self.cfg.max_segments:
+            raise TableFullError("lh directory exhausted")
+        self.state, ok = dash_lh.split_next(self.cfg, self.state)
+        if not bool(ok):
+            raise AssertionError("LH split rehash failed to refit records")
+
+    @property
+    def active_segments(self) -> int:
+        return dash_lh.lh_active_segments(self.cfg, self.state)

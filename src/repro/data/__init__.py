@@ -1,0 +1,7 @@
+"""Data substrate: synthetic sharded corpus, packing, Dash-LH dedup."""
+from . import dedup, pipeline
+from .pipeline import PackedBatcher, PipelineConfig, SyntheticCorpus
+from .dedup import DedupFilter
+
+__all__ = ["dedup", "pipeline", "PackedBatcher", "PipelineConfig",
+           "SyntheticCorpus", "DedupFilter"]

@@ -1,0 +1,213 @@
+"""Distributed Dash: the paper's "scalable hashing" scaled out to a TPU pod.
+
+Every device owns an independent Dash-EH table (a shard). The top
+log2(n_shards) bits of the addressing hash pick the owner — the distributed
+extension of the MSB directory. Query batches start *sharded over devices*;
+each device routes its local queries to owners with a fixed-capacity
+``all_to_all`` (MoE-style dispatch), owners probe shard-locally (the Pallas
+fingerprint path applies verbatim — shards are ordinary Dash tables), and a
+second ``all_to_all`` routes results back.
+
+Scalability argument mirrors the paper's: probes are bandwidth-bound and
+shards touch disjoint memory; the only cross-chip cost is ~24 bytes/query
+each way vs. the ~256-byte bucket traffic it replaces, so the fabric term
+stays well under the local-HBM term (benchmarks/dht_roofline.py derives both
+from the dry-run artifact).
+
+SMOs stay shard-local: a segment split never moves keys across shards (the
+owner bits are disjoint from the shard-local directory bits), so there is no
+cross-shard coordination — this is what makes the design elastic: growing
+from 1 to 2 pods adds one owner bit and moves only metadata.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import DashConfig, engine, hashing, layout
+from repro.core.layout import DashState
+
+I32 = jnp.int32
+U32 = jnp.uint32
+
+
+def make_sharded_state(cfg: DashConfig, n_shards: int) -> DashState:
+    one = layout.make_state(cfg, "eh")
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (n_shards,) + x.shape).copy(), one)
+
+
+def make_abstract(cfg: DashConfig, n_shards: int):
+    one = jax.eval_shape(lambda: layout.make_state(cfg, "eh"))
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct((n_shards,) + x.shape, x.dtype), one)
+
+
+def owner_of(keys_hi, keys_lo, n_shards: int):
+    """Owner shard from the TOP bits of h1 — the distributed MSB directory.
+    Shard-local directories consume the next dir_depth_max bits, so probing
+    inside the owner uses the unchanged 32-bit hash."""
+    h1 = hashing.hash1(keys_hi, keys_lo)
+    return (h1 >> U32(32 - int(np.log2(n_shards)))).astype(I32)
+
+
+def _local_dispatch(hi, lo, v, n_shards: int, capacity: int):
+    """Route this device's queries into (n_shards, capacity) buffers.
+    Returns buffers + src map (-1 = empty lane) + kept mask."""
+    owner = owner_of(hi, lo, n_shards)
+    onehot = jax.nn.one_hot(owner, n_shards, dtype=I32)
+    pos = jnp.cumsum(onehot, axis=0) - 1
+    slot = jnp.sum(pos * onehot, axis=1)
+    keep = slot < capacity
+    dst = jnp.where(keep, owner * capacity + slot, n_shards * capacity)
+    size = n_shards * capacity + 1
+    b_hi = jnp.zeros((size,), U32).at[dst].set(hi)
+    b_lo = jnp.zeros((size,), U32).at[dst].set(lo)
+    b_v = jnp.zeros((size,), U32).at[dst].set(v)
+    b_src = jnp.full((size,), -1, I32).at[dst].set(
+        jnp.where(keep, jnp.arange(hi.shape[0]), -1))
+    sh = (n_shards, capacity)
+    return (b_hi[:-1].reshape(sh), b_lo[:-1].reshape(sh),
+            b_v[:-1].reshape(sh), b_src[:-1].reshape(sh), keep)
+
+
+def auto_capacity(q_local: int, n_shards: int, slack: float = 4.0) -> int:
+    """Routing lanes per (src, dst): expected q_local/n_shards with slack.
+    Oversized lanes are pure wasted wire — right-sizing them was a 16x
+    fabric-bytes win at 256 chips (EXPERIMENTS.md SSPerf, DHT cell)."""
+    want = int(np.ceil(q_local / n_shards * slack))
+    return max(8, 1 << int(np.ceil(np.log2(want))))
+
+
+def build_dht_ops(cfg: DashConfig, mesh: Mesh, axes=("data",),
+                  capacity: int | None = None, q_local_hint: int = 1024):
+    """jitted (search_fn, insert_fn) over a device-sharded table.
+
+    Inputs: keys reshaped (n_shards, q_local), sharded on dim 0.
+    Payloads are PACKED into one (n_shards, cap, W) word tensor so each
+    direction is a single all_to_all (one launch on the ICI, not four)."""
+    axes = tuple(axes)
+    n_shards = int(np.prod([mesh.shape[a] for a in axes]))
+    if capacity is None:
+        capacity = auto_capacity(q_local_hint, n_shards)
+    st_spec = jax.tree.map(lambda _: P(axes), make_abstract(cfg, n_shards))
+    q_spec = P(axes)
+    a2a = lambda x: jax.lax.all_to_all(x, axes, 0, 0, tiled=True)
+
+    def search_inner(st, hi, lo):
+        hi, lo = hi[0], lo[0]                     # (q_local,)
+        b_hi, b_lo, _, b_src, keep = _local_dispatch(
+            hi, lo, jnp.zeros_like(hi), n_shards, capacity)
+        req = a2a(jnp.stack([b_hi, b_lo], axis=-1))       # one payload out
+        local = jax.tree.map(lambda x: x[0], st)
+        found, vals = engine.search_batch(cfg, "eh", local,
+                                          req[..., 0].reshape(-1),
+                                          req[..., 1].reshape(-1))
+        resp = a2a(jnp.stack([found.astype(U32), vals], axis=-1)
+                   .reshape(n_shards, capacity, 2))       # one payload back
+        out_f = jnp.zeros(hi.shape[0], jnp.bool_)
+        out_v = jnp.zeros(hi.shape[0], U32)
+        src = b_src.reshape(-1)
+        safe = jnp.clip(src, 0)
+        out_f = out_f.at[safe].max((resp[..., 0].reshape(-1) > 0) & (src >= 0))
+        out_v = out_v.at[safe].max(jnp.where(src >= 0, resp[..., 1].reshape(-1), 0))
+        return out_f[None], out_v[None], keep[None]
+
+    def insert_inner(st, hi, lo, v):
+        hi, lo, v = hi[0], lo[0], v[0]
+        b_hi, b_lo, b_v, b_src, keep = _local_dispatch(hi, lo, v, n_shards,
+                                                       capacity)
+        valid_lane = (b_src >= 0).astype(U32)
+        req = a2a(jnp.stack([b_hi, b_lo, b_v, valid_lane], axis=-1))
+        local = jax.tree.map(lambda x: x[0], st)
+        local, statuses, _ = engine.insert_batch(
+            cfg, "eh", local, req[..., 0].reshape(-1), req[..., 1].reshape(-1),
+            req[..., 2].reshape(-1), None, req[..., 3].reshape(-1) > 0)
+        s_back = a2a(statuses.reshape(n_shards, capacity))
+        out = jnp.full(hi.shape[0], -1, I32)
+        src = b_src.reshape(-1)
+        out = out.at[jnp.clip(src, 0)].max(
+            jnp.where(src >= 0, s_back.reshape(-1), -1))
+        out = jnp.where(out < 0, layout.DROPPED, out)   # capacity-overflow lanes
+        return jax.tree.map(lambda x: x[None], local), out[None], keep[None]
+
+    search_fn = jax.jit(shard_map(
+        search_inner, mesh=mesh, in_specs=(st_spec, q_spec, q_spec),
+        out_specs=(q_spec, q_spec, q_spec), check_rep=False))
+    insert_fn = jax.jit(shard_map(
+        insert_inner, mesh=mesh,
+        in_specs=(st_spec, q_spec, q_spec, q_spec),
+        out_specs=(st_spec, q_spec, q_spec), check_rep=False),
+        donate_argnums=(0,))
+    return search_fn, insert_fn, n_shards
+
+
+class DistributedDash:
+    """Host wrapper: device-sharded Dash with shard-local SMO handling."""
+
+    def __init__(self, cfg: DashConfig, mesh: Mesh, axes=("data",),
+                 capacity: int | None = None, q_local_hint: int = 1024):
+        self.cfg = cfg
+        self.mesh = mesh
+        self.axes = tuple(axes)
+        self.search_fn, self.insert_fn, self.n_shards = build_dht_ops(
+            cfg, mesh, self.axes, capacity, q_local_hint)
+        sh = NamedSharding(mesh, P(self.axes))
+        self.state = jax.device_put(make_sharded_state(cfg, self.n_shards),
+                                    sh)
+
+    def _shape_queries(self, keys):
+        keys = np.asarray(keys, np.uint64)
+        q_local = -(-keys.size // self.n_shards)
+        pad = q_local * self.n_shards - keys.size
+        keys_p = np.concatenate([keys, np.zeros(pad, np.uint64)])
+        hi, lo = hashing.np_split_keys(keys_p)
+        shape = (self.n_shards, q_local)
+        return (jnp.asarray(hi).reshape(shape), jnp.asarray(lo).reshape(shape),
+                keys.size, pad)
+
+    def insert(self, keys, vals, max_rounds: int = 8):
+        vals = np.asarray(vals, np.uint32)
+        for _ in range(max_rounds):
+            hi, lo, n, pad = self._shape_queries(keys)
+            v = jnp.asarray(np.concatenate(
+                [vals, np.zeros(pad, np.uint32)])).reshape(hi.shape)
+            self.state, statuses, keep = self.insert_fn(self.state, hi, lo, v)
+            statuses = np.asarray(statuses).reshape(-1)[:n]
+            need = statuses == layout.NEED_SPLIT
+            if not need.any():
+                return statuses
+            self._split_for(np.asarray(keys)[need])
+            keys, vals = np.asarray(keys)[need], vals[need]
+        raise RuntimeError("dht insert retry budget exhausted")
+
+    def _split_for(self, keys):
+        """Shard-local splits on the owners of failed keys (host-driven)."""
+        from repro.core import dash_eh
+        hi, lo = hashing.np_split_keys(np.asarray(keys, np.uint64))
+        owners = np.asarray(owner_of(jnp.asarray(hi), jnp.asarray(lo),
+                                     self.n_shards))
+        h1 = hashing.np_hash1(hi, lo)
+        for shard in np.unique(owners):
+            sub = jax.tree.map(lambda x: jnp.asarray(np.asarray(x)[shard]),
+                               self.state)
+            mask = owners == shard
+            segs = np.unique(np.asarray(sub.dir)[
+                h1[mask] >> np.uint32(32 - self.cfg.dir_depth_max)])
+            for seg in segs:
+                sub, ok = dash_eh.split_segment(self.cfg, sub, int(seg))
+                assert bool(ok)
+            self.state = jax.tree.map(
+                lambda full, s: full.at[shard].set(s), self.state, sub)
+
+    def search(self, keys):
+        hi, lo, n, _ = self._shape_queries(keys)
+        f, v, keep = self.search_fn(self.state, hi, lo)
+        return (np.asarray(f).reshape(-1)[:n], np.asarray(v).reshape(-1)[:n])
+
+    @property
+    def n_items(self) -> int:
+        return int(np.sum(np.asarray(self.state.n_items)))

@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the Dash probe hot path (the compute the paper
+optimizes with SIMD on CPU; here mapped to MXU one-hot gathers + VPU compares).
+
+probe.py   — fingerprint scan (one-hot MXU gather + VPU compare)
+hashmix.py — bulk key hashing (murmur mixers on the VPU)
+ref.py     — pure-jnp oracles (exact-match contract)
+ops.py     — jit wrappers + routed end-to-end search
+"""
+from . import hashmix, ops, probe, ref
+
+__all__ = ["hashmix", "ops", "probe", "ref"]

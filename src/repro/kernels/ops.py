@@ -1,0 +1,148 @@
+"""Jit'd wrappers binding the Pallas kernels to Dash state.
+
+``plane_views`` reshapes the table's fingerprint/metadata planes into the
+hardware-aligned tiles the probe kernel wants (cheap, fusible pads).
+``probe_routed`` is the end-to-end fast path used by the distributed hash
+table: queries already routed per segment -> Pallas fingerprint scan ->
+key verification only on fingerprint hits (gathers bounded by the match
+bitmap, the paper's 'amortized one key load').
+
+On this CPU container the kernels run in interpret mode (`interpret=True`
+default); on TPU pass interpret=False — shapes/BlockSpecs are already
+MXU/VPU aligned.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing, layout
+from repro.core.layout import DashConfig, DashState
+from . import probe as probe_kernel
+from .hashmix import BLOCK, bulk_hash
+from .probe import LANES, NSLOTS, ROWS, fingerprint_probe
+
+
+@functools.partial(jax.jit, static_argnums=(0,))
+def plane_views(cfg: DashConfig, state: DashState):
+    """(fp_padded (S,128,128) u8, alloc (S,128) i32) from table state."""
+    S, BT = cfg.max_segments, cfg.buckets_total
+    fp = jnp.zeros((S, ROWS, LANES), jnp.uint8)
+    fp = fp.at[:, :BT, :16].set(state.fp)
+    alloc = jnp.zeros((S, ROWS), jnp.int32)
+    alloc = alloc.at[:, :BT].set(layout.meta_alloc(state.meta).astype(jnp.int32))
+    return fp, alloc
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def route_queries(cfg: DashConfig, state: DashState, keys_hi, keys_lo,
+                  capacity: int):
+    """Group a query batch by segment with fixed capacity (MoE-style dispatch;
+    the intra-host analog of the DHT's all_to_all routing).
+
+    Returns (q_fp, q_b, q_pb, q_src): (S, C) planes; q_src maps back to the
+    original batch position (-1 = empty lane)."""
+    S = cfg.max_segments
+    h1 = hashing.hash1(keys_hi, keys_lo)
+    h2 = hashing.hash2(keys_hi, keys_lo)
+    seg = state.dir[layout.dir_index(cfg, h1)]
+    b = layout.bucket_index(cfg, h1)
+    pb = (b + 1) & (cfg.num_buckets - 1)
+    fp = (h2 & jnp.uint32(0xFF)).astype(jnp.int32)
+
+    # position of each query within its segment's lane block
+    onehot = jax.nn.one_hot(seg, S, dtype=jnp.int32)            # (Q, S)
+    pos = jnp.cumsum(onehot, axis=0) - 1                         # running count
+    slot = jnp.sum(pos * onehot, axis=1)                         # (Q,)
+    keep = slot < capacity
+
+    q_fp = jnp.zeros((S, capacity), jnp.int32)
+    q_b = jnp.full((S, capacity), -1, jnp.int32)
+    q_pb = jnp.full((S, capacity), -1, jnp.int32)
+    q_src = jnp.full((S, capacity), -1, jnp.int32)
+    idx = (jnp.where(keep, seg, 0), jnp.where(keep, slot, 0))
+    q_fp = q_fp.at[idx].set(jnp.where(keep, fp, 0))
+    q_b = q_b.at[idx].set(jnp.where(keep, b, -1))
+    q_pb = q_pb.at[idx].set(jnp.where(keep, pb, -1))
+    q_src = q_src.at[idx].set(jnp.where(keep, jnp.arange(keys_hi.shape[0]), -1))
+    return q_fp, q_b, q_pb, q_src, keep
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def probe_routed(cfg: DashConfig, state: DashState, keys_hi, keys_lo,
+                 capacity: int = 256, interpret: bool = True):
+    """End-to-end batched search through the Pallas fingerprint kernel.
+
+    Covers target+probing buckets and (rare) stash fallback via the engine's
+    overflow metadata only when the bitmaps miss. Returns (found, values)
+    aligned with the input batch. Queries overflowing the routing capacity
+    are resolved by the caller via the plain engine path (`keep` lanes)."""
+    from repro.core import engine  # local: avoid import cycle
+
+    Q = keys_hi.shape[0]
+    fp_pad, alloc = plane_views(cfg, state)
+    q_fp, q_b, q_pb, q_src, keep = route_queries(cfg, state, keys_hi, keys_lo,
+                                                 capacity)
+    bits_b, bits_pb = fingerprint_probe(fp_pad, alloc, q_fp, q_b, q_pb,
+                                        interpret=interpret)
+
+    # verify fingerprint hits with real key compares (gather only on match)
+    seg_ids = jnp.broadcast_to(jnp.arange(cfg.max_segments)[:, None], q_b.shape)
+
+    def verify(seg, bqs, bits, hi, lo):
+        ok = jnp.zeros((), jnp.bool_)
+        val = jnp.zeros((), jnp.uint32)
+        safe_b = jnp.clip(bqs, 0, cfg.buckets_total - 1)
+        for j in range(NSLOTS):
+            hit = ((bits >> j) & 1) == 1
+            k_hi = state.key_hi[seg, safe_b, j]
+            k_lo = state.key_lo[seg, safe_b, j]
+            m = hit & (k_hi == hi) & (k_lo == lo)
+            val = jnp.where(m & ~ok, state.val[seg, safe_b, j], val)
+            ok = ok | m
+        return ok, val
+
+    flat_src = q_src.reshape(-1)
+    hi_r = jnp.where(flat_src >= 0, keys_hi[jnp.clip(flat_src, 0)], 0)
+    lo_r = jnp.where(flat_src >= 0, keys_lo[jnp.clip(flat_src, 0)], 0)
+    vfn = jax.vmap(verify)
+    ok_b, val_b = vfn(seg_ids.reshape(-1), q_b.reshape(-1), bits_b.reshape(-1), hi_r, lo_r)
+    ok_p, val_p = vfn(seg_ids.reshape(-1), q_pb.reshape(-1), bits_pb.reshape(-1), hi_r, lo_r)
+    ok = ok_b | ok_p
+    val = jnp.where(ok_b, val_b, val_p)
+
+    found = jnp.zeros((Q,), jnp.bool_)
+    values = jnp.zeros((Q,), jnp.uint32)
+    src_safe = jnp.clip(flat_src, 0)
+    found = found.at[src_safe].max(ok & (flat_src >= 0))
+    values = values.at[src_safe].max(jnp.where(ok & (flat_src >= 0), val, 0))
+
+    # stash fallback for misses (uses overflow metadata; rare by design)
+    def stash_lookup(hi, lo, miss):
+        def go(_):
+            q_hi, q_lo, h1, h2 = engine._query_parts(cfg, hi, lo,
+                                                     jnp.zeros((cfg.key_heap_words,), jnp.uint32))
+            seg, b = engine.locate(cfg, "eh", state, h1)
+            f, v = engine.probe_in_segment(cfg, state, seg, b, h2, q_hi, q_lo,
+                                           jnp.zeros((cfg.key_heap_words,), jnp.uint32))
+            return f, v
+
+        return jax.lax.cond(miss, go, lambda _: (jnp.asarray(False), jnp.uint32(0)), None)
+
+    if cfg.num_stash > 0:
+        sf, sv = jax.vmap(stash_lookup)(keys_hi, keys_lo, ~found & keep)
+        values = jnp.where(sf & ~found, sv, values)
+        found = found | sf
+    return found, values, keep
+
+
+def bulk_hash_padded(keys_hi, keys_lo, interpret: bool = True):
+    """bulk_hash with automatic BLOCK padding (host convenience)."""
+    n = keys_hi.shape[0]
+    pad = (-n) % BLOCK
+    hi = jnp.pad(keys_hi, (0, pad))
+    lo = jnp.pad(keys_lo, (0, pad))
+    h1, h2, fp = bulk_hash(hi, lo, interpret=interpret)
+    return h1[:n], h2[:n], fp[:n]

@@ -1,0 +1,93 @@
+"""Pallas TPU kernel: fingerprint probe (the paper's SIMD fingerprint scan).
+
+The paper's probe hot-path scans 18 one-byte fingerprints per bucket with
+SIMD before touching any key (Sec. 4.2). On TPU the analogous unit is the VPU
+(8x128 lanes) with the MXU doing the bucket-row *gather* as a one-hot matmul
+— the idiomatic TPU replacement for random row gathers.
+
+Layout adaptation (DESIGN.md Sec. 2): a segment's fingerprint plane is padded
+to a (128, 128) uint8 tile — 128 bucket rows (64 normal + stash + pad) by 128
+lanes (first 16 = slot fingerprints). 128 is the MXU's native dimension, so
+the one-hot gather `one_hot(q_b) @ fp_plane` is a single aligned MXU pass,
+and the fingerprint-compare runs on full VPU lanes. This mirrors the paper's
+choice of a 256-byte bucket (the Optane block): size the probe unit to the
+hardware's native transfer/compute block.
+
+Grid: (segments, query_blocks). Each program probes a block of BQ queries,
+already routed to their segment (the DHT dispatch of distributed/dht.py),
+against that segment's resident fingerprint plane:
+
+    out[s, q] = match bitmap of query q's fingerprint over the allocated
+                slots of its target bucket (and probing bucket), 14 bits.
+
+Queries with bucket id -1 are padding (bitmap 0). Key verification of the
+(rare) matches happens outside — exactly the paper's "only access slots with
+matching fingerprints".
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BQ = 128          # queries per program — one full VPU/MXU row block
+ROWS = 128        # padded bucket rows per segment (64+stash -> 128)
+LANES = 128       # padded fingerprint lanes (16 real -> 128)
+NSLOTS = 14
+
+
+def _probe_block(fp_ref, alloc_ref, qfp_ref, qb_ref, qpb_ref, out_b_ref, out_pb_ref):
+    """One (segment, query-block) program."""
+    fp = fp_ref[0].astype(jnp.float32)              # (ROWS, LANES) — small ints, exact in f32
+    alloc = alloc_ref[0]                            # (ROWS,) int32 — 14-bit bitmaps
+    qfp = qfp_ref[0]                                # (BQ,) int32 fingerprint values
+    rows = jax.lax.broadcasted_iota(jnp.int32, (BQ, ROWS), 1)
+
+    def gather_and_match(qb):
+        onehot = (rows == qb[:, None]).astype(jnp.float32)          # (BQ, ROWS)
+        gfp = jnp.dot(onehot, fp, preferred_element_type=jnp.float32)  # MXU gather
+        gfp = gfp[:, :NSLOTS].astype(jnp.int32)                      # (BQ, 14)
+        galloc = jnp.sum(onehot.astype(jnp.int32) * alloc[None, :], axis=1)  # (BQ,)
+        eq = gfp == qfp[:, None]                                     # (BQ, 14)
+        bits = jnp.zeros((BQ,), jnp.int32)
+        for j in range(NSLOTS):
+            abit = (galloc >> j) & 1
+            bits = bits | ((eq[:, j].astype(jnp.int32) & abit) << j)
+        return bits
+
+    out_b_ref[0] = gather_and_match(qb_ref[0])
+    out_pb_ref[0] = gather_and_match(qpb_ref[0])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def fingerprint_probe(fp_padded, alloc, q_fp, q_b, q_pb, *, interpret=True):
+    """Batched fingerprint probe over routed queries.
+
+    Args:
+      fp_padded: (S, ROWS, LANES) uint8 — per-segment padded fp planes.
+      alloc:     (S, ROWS) int32 — per-bucket allocation bitmaps (14 bits).
+      q_fp:      (S, C) int32 — query fingerprint bytes, routed per segment.
+      q_b, q_pb: (S, C) int32 — target/probing bucket rows (-1 = padding).
+
+    Returns:
+      (bits_b, bits_pb): (S, C) int32 — per-query 14-bit match bitmaps.
+    """
+    S, C = q_fp.shape
+    assert C % BQ == 0, "query capacity must be a multiple of BQ"
+    grid = (S, C // BQ)
+    qspec = pl.BlockSpec((1, BQ), lambda s, c: (s, c))
+    return pl.pallas_call(
+        _probe_block,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, ROWS, LANES), lambda s, c: (s, 0, 0)),  # fp plane: VMEM-resident per segment
+            pl.BlockSpec((1, ROWS), lambda s, c: (s, 0)),
+            qspec, qspec, qspec,
+        ],
+        out_specs=[qspec, qspec],
+        out_shape=[jax.ShapeDtypeStruct((S, C), jnp.int32),
+                   jax.ShapeDtypeStruct((S, C), jnp.int32)],
+        interpret=interpret,
+    )(fp_padded, alloc, q_fp, q_b, q_pb)

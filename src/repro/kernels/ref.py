@@ -1,0 +1,38 @@
+"""Pure-jnp oracles for the Pallas kernels (the correctness contract).
+
+Every kernel in this package has a reference here with identical signature
+and semantics; tests sweep shapes/dtypes and assert exact equality (these are
+integer kernels — no tolerance needed)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import hashing
+from .probe import NSLOTS
+
+
+def fingerprint_probe_ref(fp_padded, alloc, q_fp, q_b, q_pb):
+    """Oracle for probe.fingerprint_probe (plain gathers, no one-hot tricks)."""
+    S, C = q_fp.shape
+
+    def per_segment(fp_s, alloc_s, qfp_s, qb_s, qpb_s):
+        def match(qb, qfp):
+            safe = jnp.clip(qb, 0, fp_s.shape[0] - 1)
+            row = fp_s[safe, :NSLOTS].astype(jnp.int32)       # (14,)
+            a = alloc_s[safe]
+            eq = (row == qfp) & (((a >> jnp.arange(NSLOTS)) & 1) == 1)
+            bits = jnp.sum(eq.astype(jnp.int32) << jnp.arange(NSLOTS))
+            return jnp.where(qb < 0, 0, bits)
+
+        bb = jax.vmap(match)(qb_s, qfp_s)
+        bp = jax.vmap(match)(qpb_s, qfp_s)
+        return bb, bp
+
+    return jax.vmap(per_segment)(fp_padded, alloc, q_fp, q_b, q_pb)
+
+
+def bulk_hash_ref(key_hi, key_lo):
+    h1 = hashing.hash1(key_hi, key_lo)
+    h2 = hashing.hash2(key_hi, key_lo)
+    return h1, h2, (h2 & jnp.uint32(0xFF)).astype(jnp.int32)

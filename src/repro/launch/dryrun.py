@@ -1,0 +1,323 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("REPRO_EXTRA_XLA_FLAGS", ""))
+# ^ MUST run before any other import (jax locks device count on first init).
+
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape) cell
+on the production mesh and extract the roofline terms.
+
+For each cell:
+  1. abstract params (eval_shape — zero allocation) + sharding specs,
+  2. jit(train/prefill/serve step, in/out shardings).lower(abstract inputs),
+  3. compiled = lowered.compile()    <- sharding coherence proof
+  4. record compiled.cost_analysis() (HLO FLOPs/bytes),
+     compiled.memory_analysis() (per-device footprint; analytic fallback),
+     and collective bytes parsed from the post-SPMD HLO text
+     (all-gather / all-reduce / reduce-scatter / all-to-all /
+      collective-permute with ring-algorithm wire-byte factors).
+
+Results land in experiments/dryrun/<mesh>/<arch>__<shape>.json; the roofline
+report (benchmarks/roofline.py) and EXPERIMENTS.md read from there.
+"""
+import argparse
+import json
+import re
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import (ARCH_IDS, SHAPES, get_config, input_specs,
+                           shape_applicable)
+from repro.launch.mesh import make_production_mesh
+from repro.models.transformer import (abstract_params, decode_state_specs,
+                                      param_specs)
+from repro.optim import adamw
+from repro.parallel import sharding
+from repro.train.steps import (TrainState, make_prefill_step, make_serve_step,
+                               make_train_step)
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8}
+
+_COLL_RE = re.compile(
+    r"=\s+(\w+)\[([\d,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def parse_collectives(hlo_text: str):
+    """Sum wire bytes per collective kind from post-SPMD HLO.
+
+    Ring-algorithm accounting per participating device group of size n:
+      all-reduce:        2 * bytes * (n-1)/n
+      all-gather:        bytes_out * (n-1)/n
+      reduce-scatter:    bytes_in  * (n-1)/n
+      all-to-all:        bytes * (n-1)/n
+      collective-permute: bytes
+    """
+    totals = {}
+    counts = {}
+    lines = hlo_text.splitlines()
+    for ln in lines:
+        m = _COLL_RE.search(ln)
+        if not m:
+            continue
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        bytes_el = _DTYPE_BYTES.get(dtype)
+        if bytes_el is None:
+            continue
+        size = bytes_el
+        if dims:
+            for d in dims.split(","):
+                size *= int(d)
+        n = None
+        g = _GROUPS_RE.search(ln)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            g2 = _GROUPS_IOTA_RE.search(ln)
+            if g2:
+                n = int(g2.group(2))
+        n = n or 2
+        f = (n - 1) / n
+        wire = {"all-reduce": 2 * size * f, "all-gather": size * f,
+                "reduce-scatter": size * f, "all-to-all": size * f,
+                "collective-permute": float(size)}[kind]
+        totals[kind] = totals.get(kind, 0.0) + wire
+        counts[kind] = counts.get(kind, 0) + 1
+    return totals, counts
+
+
+def _spec_bytes(tree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize
+                   for x in jax.tree.leaves(tree)))
+
+
+def _sharded_bytes(tree, shardings, mesh) -> int:
+    """Analytic per-device bytes for (abstract tree, shardings)."""
+    axis_size = dict(zip(mesh.axis_names, mesh.devices.shape))
+    total = 0
+    for x, sh in zip(jax.tree.leaves(tree), jax.tree.leaves(
+            shardings, is_leaf=lambda s: hasattr(s, "spec"))):
+        shards = 1
+        for ax in jax.tree.leaves(tuple(sh.spec)):
+            if ax is not None:
+                shards *= axis_size[ax]
+        total += int(np.prod(x.shape)) * x.dtype.itemsize // shards
+    return total
+
+
+def _bf16_params(tree):
+    return jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(
+            x.shape, jnp.bfloat16 if x.dtype == jnp.float32 else x.dtype), tree)
+
+
+def lower_cell(arch: str, shape: str, mesh, rules: str | None = None):
+    """Returns (lowered, aux dict with analytic byte counts)."""
+    cfg = get_config(arch)
+    case = SHAPES[shape]
+    spec = input_specs(cfg, shape)
+    pshapes, pspecs = abstract_params(cfg)
+
+    if case.kind == "train":
+        # Single-pod trains default to the pure-DP(ZeRO-3) + shard_map-MoE
+        # layout: 3-18x collective wins over TP+SP across every family
+        # (EXPERIMENTS.md SSPerf). The multipod mesh keeps TP+SP: the
+        # assigned global batch (256) is smaller than 512 chips, so pure DP
+        # would duplicate compute across the model axis — with production
+        # batches (>= chips) train_dp extends to multipod via the pod axis.
+        multi = "pod" in mesh.axis_names
+        if rules is None:
+            if multi:
+                rules = "train_multi_moe" if cfg.family == "moe" else "train"
+            elif cfg.family == "moe" and cfg.n_experts % 16 == 0:
+                rules = "train_dp_ep"   # true EP (compute-bound; SSPerf)
+            else:
+                rules = "train_dp"
+        with sharding.use(mesh, rules):
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            p_sh = sharding.tree_shardings(pspecs, mesh, shape_tree=pshapes)
+            opt_abs = jax.eval_shape(adamw.init, pshapes)
+            repl = NamedSharding(mesh, P())
+            opt_sh = adamw.AdamWState(m=p_sh, v=p_sh, count=repl)
+            state_abs = TrainState(pshapes, opt_abs, jax.ShapeDtypeStruct((), jnp.int32))
+            state_sh = TrainState(p_sh, opt_sh, repl)
+            bspec = {k: sharding.spec_for(("batch",) + (None,) * (len(v.shape) - 1),
+                                          dims=tuple(v.shape))
+                     for k, v in spec["batch"].items()}
+            b_sh = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
+            met_sh = repl
+            step = make_train_step(cfg)
+            jitted = jax.jit(step, in_shardings=(state_sh, b_sh),
+                             out_shardings=(state_sh, met_sh),
+                             donate_argnums=(0,))
+            lowered = jitted.lower(state_abs, spec["batch"])
+            static_bytes = _sharded_bytes(pshapes, p_sh, mesh) * 3  # params+m+v
+        return lowered, {"static_bytes_per_device": static_bytes, "rules": rules}
+
+    if case.kind == "prefill":
+        # prefill shards like the training fwd (SP); MoE uses dense-MoE rules
+        rules = rules or ("prefill_moe" if cfg.family == "moe" else "train")
+        with sharding.use(mesh, rules):
+            from jax.sharding import NamedSharding
+            p_abs = _bf16_params(pshapes)
+            p_sh = sharding.tree_shardings(pspecs, mesh, shape_tree=p_abs)
+            bspec = {k: sharding.spec_for(("batch",) + (None,) * (len(v.shape) - 1),
+                                          dims=tuple(v.shape))
+                     for k, v in spec["batch"].items()}
+            b_sh = {k: NamedSharding(mesh, s) for k, s in bspec.items()}
+            lspec = sharding.spec_for(("batch", "seq", "vocab"))
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh),
+                             out_shardings=NamedSharding(mesh, lspec))
+            lowered = jitted.lower(p_abs, spec["batch"])
+            static_bytes = _sharded_bytes(p_abs, p_sh, mesh)
+        return lowered, {"static_bytes_per_device": static_bytes, "rules": rules}
+
+    # decode
+    rules = rules or ("decode_b1" if case.global_batch == 1 else "decode")
+    with sharding.use(mesh, rules):
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        p_abs = _bf16_params(pshapes)
+        p_sh = sharding.tree_shardings(pspecs, mesh, shape_tree=p_abs)
+        sspecs = decode_state_specs(cfg)
+        s_sh = sharding.tree_shardings(sspecs, mesh, shape_tree=spec["state"])
+        i_sh = {k: NamedSharding(mesh, sharding.spec_for(
+            ("batch",) + (None,) * (len(v.shape) - 1), dims=tuple(v.shape)))
+            for k, v in spec["inputs"].items()}
+        logit_sh = NamedSharding(mesh, sharding.spec_for(
+            ("batch", "vocab"), dims=(case.global_batch, cfg.vocab_size)))
+        step = make_serve_step(cfg)
+        jitted = jax.jit(step, in_shardings=(p_sh, s_sh, i_sh),
+                         out_shardings=(logit_sh, s_sh), donate_argnums=(1,))
+        lowered = jitted.lower(p_abs, spec["state"], spec["inputs"])
+        static_bytes = (_sharded_bytes(p_abs, p_sh, mesh)
+                        + _sharded_bytes(spec["state"], s_sh, mesh))
+    return lowered, {"static_bytes_per_device": static_bytes, "rules": rules}
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, out_dir: Path,
+             rules: str | None = None, save_hlo: bool = False):
+    mesh_name = "multipod" if multi_pod else "pod"
+    cfg = get_config(arch)
+    if not shape_applicable(cfg, shape):
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_name,
+               "status": "skipped",
+               "reason": "long_500k needs sub-quadratic attention "
+                         "(full-attention arch; DESIGN.md SS5)"}
+        _write(out_dir, mesh_name, arch, shape, rec)
+        print(f"[dryrun] {arch} x {shape} x {mesh_name}: SKIP (full attention)")
+        return rec
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    with mesh:
+        lowered, aux = lower_cell(arch, shape, mesh, rules)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        try:
+            cost = compiled.cost_analysis()
+            if isinstance(cost, list):
+                cost = cost[0]
+        except Exception as e:            # pragma: no cover
+            cost = {"error": str(e)}
+        try:
+            mem = compiled.memory_analysis()
+            mem_rec = {
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "generated_code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+            }
+        except Exception as e:            # pragma: no cover
+            mem_rec = {"error": str(e)}
+
+        hlo = compiled.as_text()
+        from repro.launch import hlo_analysis
+        res = hlo_analysis.analyze(hlo)
+
+    n_dev = 512 if multi_pod else 256
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok",
+        "rules": aux["rules"], "n_devices": n_dev,
+        # raw cost_analysis (while bodies counted once) + corrected dot flops
+        "flops_raw": cost.get("flops"),
+        "bytes_raw": cost.get("bytes accessed"),
+        "dot_flops_per_device": res["dot_flops"],
+        "memory_analysis": mem_rec,
+        "static_bytes_per_device": aux["static_bytes_per_device"],
+        "collective_wire_bytes": res["collectives"],
+        "collective_counts": res["collective_counts"],
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "hlo_bytes": len(hlo),
+    }
+    if save_hlo:
+        (out_dir / mesh_name).mkdir(parents=True, exist_ok=True)
+        (out_dir / mesh_name / f"{arch}__{shape}.hlo.txt").write_text(hlo)
+    _write(out_dir, mesh_name, arch, shape, rec)
+    print(f"[dryrun] {arch} x {shape} x {mesh_name}: OK "
+          f"dotflops={res['dot_flops']:.3e} colls={sum(res['collective_counts'].values()):.0f} "
+          f"static={aux['static_bytes_per_device']/2**30:.2f}GiB/dev "
+          f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+    return rec
+
+
+def _write(out_dir: Path, mesh_name: str, arch: str, shape: str, rec: dict):
+    d = out_dir / mesh_name
+    d.mkdir(parents=True, exist_ok=True)
+    (d / f"{arch}__{shape}.json").write_text(json.dumps(rec, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None, choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="pod", choices=["pod", "multipod", "both"])
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args()
+    out = Path(args.out)
+
+    archs = list(ARCH_IDS) if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) else [args.shape]
+    meshes = [False, True] if args.mesh == "both" else [args.mesh == "multipod"]
+
+    failures = []
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                tag = f"{a}__{s}.json"
+                if args.skip_existing and (
+                        out / ("multipod" if mp else "pod") / tag).exists():
+                    continue
+                try:
+                    run_cell(a, s, mp, out, args.rules, args.save_hlo)
+                except Exception as e:
+                    traceback.print_exc()
+                    failures.append((a, s, mp, str(e)))
+                    _write(out, "multipod" if mp else "pod", a, s,
+                           {"arch": a, "shape": s, "status": "error",
+                            "error": str(e)})
+    if failures:
+        print(f"[dryrun] {len(failures)} FAILURES:")
+        for f in failures:
+            print("  ", f)
+        raise SystemExit(1)
+    print("[dryrun] all requested cells passed")
+
+
+if __name__ == "__main__":
+    main()

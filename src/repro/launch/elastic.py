@@ -1,0 +1,69 @@
+"""Elastic resize: rebuild a smaller/larger mesh and reshard state.
+
+Fleet scenario: a host (8 chips) fails mid-run. The runbook is
+  1. instant-restore the latest commit (manifest only, O(1)),
+  2. rebuild the mesh from surviving hosts (drop a 'data' column — the mesh
+     stays rectangular; the model axis is never shrunk since TP shards are
+     intra-host),
+  3. re-lower the step function for the new mesh; parameter/optimizer shards
+     resize automatically because shardings are derived from the SAME logical
+     rules on the new mesh,
+  4. rescale the data plan: the global batch is kept by raising per-host
+     batch (grad accumulation) or accepted-smaller with an LR rescale.
+
+The deterministic per-shard data pipeline (data/pipeline.py) means surviving
+hosts simply re-seed shard assignments — no data movement.
+
+This module is exercised at test scale (8 -> 4 fake devices) in
+tests/test_elastic.py; on a real fleet the same code runs per-coordinator.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.transformer import param_specs
+from repro.parallel import sharding
+from repro.train.steps import make_train_step
+
+
+def shrink_mesh(mesh: Mesh, axis: str = "data", drop: int = 1) -> Mesh:
+    """Rectangular mesh with `drop` slices removed from `axis`."""
+    names = mesh.axis_names
+    idx = names.index(axis)
+    devs = mesh.devices
+    keep = devs.shape[idx] - drop
+    assert keep >= 1, "cannot shrink axis to zero"
+    sl = [slice(None)] * devs.ndim
+    sl[idx] = slice(0, keep)
+    return Mesh(devs[tuple(sl)], names)
+
+
+def relower_for_mesh(cfg, new_mesh: Mesh, rules: str = "train",
+                     peak_lr: float = 3e-4):
+    """Re-jit the train step for a resized mesh (shardings re-derived from
+    the same logical rules)."""
+    sharding.set_active(new_mesh, rules)
+    return jax.jit(make_train_step(cfg, peak_lr=peak_lr), donate_argnums=(0,))
+
+
+def reshard_tree(tree, new_mesh: Mesh, spec_tree, rules: str = "train"):
+    """device_put existing arrays onto the resized mesh."""
+    with sharding.use(new_mesh, rules):
+        sh = sharding.tree_shardings(spec_tree, new_mesh, shape_tree=tree)
+    return jax.device_put(tree, sh)
+
+
+def rescale_batch_plan(global_batch: int, old_hosts: int, new_hosts: int):
+    """Keep the global batch via per-host microbatching where divisible;
+    otherwise return the nearest feasible batch + LR scale factor."""
+    per_old = global_batch // old_hosts
+    if global_batch % new_hosts == 0:
+        return {"global_batch": global_batch,
+                "per_host": global_batch // new_hosts,
+                "accum_steps": max(1, (global_batch // new_hosts) // per_old),
+                "lr_scale": 1.0}
+    feasible = (global_batch // new_hosts) * new_hosts
+    return {"global_batch": feasible, "per_host": feasible // new_hosts,
+            "accum_steps": 1, "lr_scale": feasible / global_batch}

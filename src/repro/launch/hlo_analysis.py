@@ -1,0 +1,183 @@
+"""Post-SPMD HLO analysis: trip-count-corrected FLOPs and collective bytes.
+
+``compiled.cost_analysis()`` counts ``while`` (lax.scan) bodies ONCE, which
+understates scanned-layer models by ~n_layers and flash-attention inner scans
+by ~n_chunks. This module parses the partitioned HLO text, reconstructs the
+computation call graph with while trip counts (from the loop-condition
+constants), and accumulates:
+
+  * dot FLOPs:  2 * prod(output dims) * prod(contracting dims), x multiplier
+  * collective wire bytes per kind (ring-algorithm factors), x multiplier
+
+Shapes in partitioned HLO are already per-device, so totals are per-device
+quantities — exactly what the roofline terms want.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
+                "u8": 1, "pred": 1, "f64": 8, "s64": 8, "u64": 8, "s16": 2,
+                "u16": 2, "f8e4m3fn": 1, "f8e5m2": 1, "c64": 8, "c128": 16}
+
+_COMP_HDR = re.compile(r"^(ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->")
+_SHAPE_DEF = re.compile(r"%([\w\.\-]+)\s*=\s*\(?(\w+)\[([\d,]*)\]")
+_PARAM_DEF = re.compile(r"%?([\w\.\-]+):\s*(\w+)\[([\d,]*)\]")
+_DOT = re.compile(
+    r"%([\w\.\-]+)\s*=\s*(\w+)\[([\d,]*)\][^=]*dot\(%?([\w\.\-]+), %?([\w\.\-]+)\)"
+    r".*?lhs_contracting_dims=\{([\d,]*)\}")
+_COLL = re.compile(
+    r"=\s+(.*?)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(-start|-done)?\(")
+_TYPE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_WHILE = re.compile(r"while\(.*?\), condition=%?([\w\.\-]+), body=%?([\w\.\-]+)")
+_TRIP = re.compile(r'"known_trip_count":\{"n":"(\d+)"\}')
+_CALLS = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_CONST = re.compile(r"constant\((\d+)\)")
+
+
+@dataclasses.dataclass
+class CollectiveOp:
+    kind: str
+    bytes_shard: float
+    group: int
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    entry: bool = False
+    dots: list = dataclasses.field(default_factory=list)       # flops (raw)
+    colls: list = dataclasses.field(default_factory=list)      # CollectiveOp
+    whiles: list = dataclasses.field(default_factory=list)     # (cond, body, trip|None)
+    calls: list = dataclasses.field(default_factory=list)      # names
+    consts: list = dataclasses.field(default_factory=list)     # ints seen
+
+
+def _shape_elems(dims: str) -> int:
+    if not dims:
+        return 1
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n
+
+
+def parse_hlo(text: str):
+    comps: dict[str, Computation] = {}
+    cur: Computation | None = None
+    shapes: dict[str, tuple] = {}
+
+    for ln in text.splitlines():
+        hdr = _COMP_HDR.match(ln) if (ln and not ln[0].isspace()) else None
+        if hdr:
+            cur = Computation(hdr.group(2), entry=bool(hdr.group(1)))
+            comps[cur.name] = cur
+            shapes = {}
+            for pm in _PARAM_DEF.finditer(ln):
+                shapes[pm.group(1)] = (pm.group(2),
+                                       tuple(int(d) for d in pm.group(3).split(",") if d))
+            continue
+        if cur is None:
+            continue
+        sd = _SHAPE_DEF.search(ln)
+        if sd:
+            shapes[sd.group(1)] = (sd.group(2),
+                                   tuple(int(d) for d in sd.group(3).split(",") if d))
+        dm = _DOT.search(ln)
+        if dm:
+            out_elems = _shape_elems(dm.group(3))
+            lhs = shapes.get(dm.group(4))
+            contract = 1
+            if lhs is not None and dm.group(6):
+                for ci in dm.group(6).split(","):
+                    ci = int(ci)
+                    if ci < len(lhs[1]):
+                        contract *= lhs[1][ci]
+            cur.dots.append(2.0 * out_elems * contract)
+        cm = _COLL.search(ln)
+        if cm and cm.group(3) != "-done":
+            # sum all result-tuple element sizes (tuple collectives are common)
+            sz = 0
+            for tm in _TYPE.finditer(cm.group(1)):
+                sz += _DTYPE_BYTES.get(tm.group(1), 4) * _shape_elems(tm.group(2))
+            n = None
+            g = _GROUPS.search(ln)
+            if g:
+                n = len(g.group(1).split(","))
+            else:
+                g2 = _GROUPS_IOTA.search(ln)
+                if g2:
+                    n = int(g2.group(2))
+            cur.colls.append(CollectiveOp(cm.group(2), float(sz), n or 2))
+        wm = _WHILE.search(ln)
+        if wm:
+            tm = _TRIP.search(ln)
+            cur.whiles.append((wm.group(1), wm.group(2),
+                               int(tm.group(1)) if tm else None))
+        for c in _CALLS.finditer(ln):
+            cur.calls.append(c.group(1))
+        for k in _CONST.finditer(ln):
+            v = int(k.group(1))
+            if 1 < v < 10_000_000:
+                cur.consts.append(v)
+    return comps
+
+
+def _trip_count(comps, cond_name: str) -> int:
+    cond = comps.get(cond_name)
+    if cond is None or not cond.consts:
+        return 1
+    return max(cond.consts)
+
+
+def analyze(text: str):
+    """Returns dict with corrected per-device dot FLOPs and collective bytes."""
+    comps = parse_hlo(text)
+    entry = next((c for c in comps.values() if c.entry), None)
+    if entry is None:
+        return {"dot_flops": 0.0, "collectives": {}, "collective_counts": {}}
+
+    flops_total = 0.0
+    coll_bytes: dict[str, float] = defaultdict(float)
+    coll_counts: dict[str, float] = defaultdict(float)
+
+    seen_stack = []
+
+    def visit(comp: Computation, mult: float):
+        nonlocal flops_total
+        if comp.name in seen_stack:      # recursion guard
+            return
+        seen_stack.append(comp.name)
+        flops_total += mult * sum(comp.dots)
+        for op in comp.colls:
+            f = (op.group - 1) / op.group
+            # sizes are RESULT sizes; reduce-scatter input = result * n
+            wire = {"all-reduce": 2 * op.bytes_shard * f,
+                    "all-gather": op.bytes_shard * f,
+                    "reduce-scatter": op.bytes_shard * (op.group - 1),
+                    "all-to-all": op.bytes_shard * f,
+                    "collective-permute": op.bytes_shard}[op.kind]
+            coll_bytes[op.kind] += mult * wire
+            coll_counts[op.kind] += mult
+        for cond, body, trip in comp.whiles:
+            trip = trip if trip is not None else _trip_count(comps, cond)
+            b = comps.get(body)
+            if b is not None:
+                visit(b, mult * trip)
+        for callee in comp.calls:
+            c = comps.get(callee)
+            if c is not None and c.name != comp.name:
+                visit(c, mult)
+        seen_stack.pop()
+
+    visit(entry, 1.0)
+    return {"dot_flops": flops_total,
+            "collectives": dict(coll_bytes),
+            "collective_counts": dict(coll_counts),
+            "n_computations": len(comps)}

@@ -1,0 +1,77 @@
+"""End-to-end training driver: ``python -m repro.launch.train --arch <id>``.
+
+Runs a real (reduced or full) config through the fault-tolerant trainer on
+whatever devices exist — the same code path the dry-run lowers for 512 chips.
+On this CPU container use ``--reduced`` (the smoke-scale config) with a small
+step budget; see examples/train_lm.py for the ~100M-param recipe.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import numpy as np
+
+from repro.configs import ARCH_IDS, get_config
+from repro.data import DedupFilter, PackedBatcher, PipelineConfig
+from repro.train.trainer import Trainer, TrainerConfig
+
+
+def batch_iter(cfg, batch_size: int, seq_len: int, dedup: bool):
+    pc = PipelineConfig(vocab_size=cfg.vocab_size, seq_len=seq_len,
+                        batch_size=batch_size,
+                        dup_fraction=0.05 if dedup else 0.0)
+    batcher = PackedBatcher(pc, dedup=DedupFilter() if dedup else None)
+    if cfg.family == "vlm":
+        rng = np.random.default_rng(0)
+        for b in batcher:
+            P = cfg.num_patches
+            yield {"tokens": b["tokens"], "labels": b["labels"],
+                   "patch_embeds": rng.normal(
+                       0, 1, (batch_size, P, cfg.d_model)).astype(np.float32)}
+    elif cfg.family == "audio":
+        rng = np.random.default_rng(0)
+        for b in batcher:
+            yield {"frame_embeds": rng.normal(
+                0, 1, (batch_size, seq_len, cfg.d_model)).astype(np.float32),
+                "labels": b["labels"] % cfg.vocab_size}
+    else:
+        yield from batcher
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="yi-6b", choices=list(ARCH_IDS))
+    ap.add_argument("--reduced", action="store_true", default=True)
+    ap.add_argument("--full", dest="reduced", action="store_false")
+    ap.add_argument("--steps", type=int, default=30)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_train_ckpt")
+    ap.add_argument("--ckpt-every", type=int, default=10)
+    ap.add_argument("--dedup", action="store_true")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    tcfg = TrainerConfig(total_steps=args.steps,
+                         checkpoint_every=args.ckpt_every,
+                         checkpoint_dir=args.ckpt_dir)
+    it = batch_iter(cfg, args.batch, args.seq, args.dedup)
+    trainer = Trainer(cfg, tcfg, it)
+    if args.resume:
+        resumed = trainer.resume_if_possible()
+        if resumed is not None:
+            print(f"[train] resumed from step {resumed}")
+    result = trainer.run()
+    losses = [m["loss"] for m in result["log"] if "loss" in m]
+    print(f"[train] {args.arch} done: steps={result['final_step']} "
+          f"first_loss={losses[0]:.4f} last_loss={losses[-1]:.4f} "
+          f"restarts={result['restarts']}")
+    print(json.dumps({"first_loss": losses[0], "last_loss": losses[-1],
+                      "stragglers": len(result["stragglers"])}))
+    return result
+
+
+if __name__ == "__main__":
+    main()

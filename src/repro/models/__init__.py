@@ -1,0 +1,9 @@
+"""Model zoo: composable decoder blocks + the 10 assigned architectures."""
+from . import layers, moe, rglru, rwkv6, transformer
+from .transformer import (ModelConfig, init_params, abstract_params,
+                          param_specs, forward_train, loss_fn,
+                          decode_state_init, serve_step)
+
+__all__ = ["layers", "moe", "rglru", "rwkv6", "transformer", "ModelConfig",
+           "init_params", "abstract_params", "param_specs", "forward_train",
+           "loss_fn", "decode_state_init", "serve_step"]

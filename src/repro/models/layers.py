@@ -1,0 +1,308 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (full / sliding
+window / banded-flash), SwiGLU MLP — pure functional JAX with explicit
+logical-axis sharding specs.
+
+Conventions:
+  * params are dicts of fp32 arrays; compute casts to ``cfg.dtype`` (bf16).
+  * every init returns (params, specs) where specs mirrors params with tuples
+    of *logical* axis names; parallel/sharding.py maps them to mesh axes.
+  * attention is 'flash-style': an online-softmax scan over KV chunks, with a
+    **static band** optimization for sliding-window layers (only the chunks
+    intersecting the window are visited — this is what makes long_500k
+    sub-quadratic for SWA/local-attention architectures).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+# logical axis names (resolved by parallel/sharding.py)
+EMBED, HEADS, KV, HEAD_DIM, MLP, VOCAB, EXPERT, LAYERS, RNN = (
+    "embed", "heads", "kv", "head_dim", "mlp", "vocab", "expert", "layers", "rnn")
+
+
+def truncated_normal(key, shape, scale, dtype=jnp.float32):
+    return scale * jax.random.truncated_normal(key, -2.0, 2.0, shape, dtype)
+
+
+def wuse(w, dtype, names):
+    """Cast a weight for use and pin its use-layout: the FSDP-sharded dims
+    (logical 'embed') are GATHERED here (bf16 wire), never contracted while
+    sharded — XLA otherwise may choose partial-sum + all-reduce of the fp32
+    activations, which measured 10-50 TB/step on MoE cells (EXPERIMENTS.md)."""
+    from repro.parallel.sharding import logical_constraint
+    return logical_constraint(w.astype(dtype), names)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}, {"scale": (EMBED,)}
+
+
+def rmsnorm(params, x, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * params["scale"]).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim, theta):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta):
+    """x: (..., S, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta))
+    angles = positions[..., None].astype(jnp.float32) * freqs       # (..., S, hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    sliding_window: Optional[int] = None   # None = full causal
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+
+
+def attention_init(key, cfg: AttnConfig):
+    d, H, G, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    ks = jax.random.split(key, 4)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "wq": truncated_normal(ks[0], (d, H * hd), s),
+        "wk": truncated_normal(ks[1], (d, G * hd), s),
+        "wv": truncated_normal(ks[2], (d, G * hd), s),
+        "wo": truncated_normal(ks[3], (H * hd, d), 1.0 / math.sqrt(H * hd)),
+    }
+    specs = {"wq": (EMBED, HEADS), "wk": (EMBED, KV), "wv": (EMBED, KV),
+             "wo": (HEADS, EMBED)}
+    return params, specs
+
+
+def _chunked_attention(q, k, v, q_start, kv_start, causal_offset, window):
+    """Online-softmax over KV chunks for one query block.
+
+    q: (B, H, Tq, hd); k, v: (B, G, Skv, hd) with H % G == 0.
+    Positions: query i sits at q_start + i, key j at kv_start + j; causal
+    constraint is key_pos <= query_pos + causal_offset (offset 0 normally).
+    """
+    B, H, Tq, hd = q.shape
+    G = k.shape[1]
+    rep = H // G
+    scale = 1.0 / math.sqrt(hd)
+    Skv = k.shape[2]
+    kc = min(Skv, 1024)
+    pad = (-Skv) % kc
+    if pad:
+        # padded keys sit at positions >= real length: masked by causality
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0)))
+    n_chunks = (Skv + pad) // kc
+    q32 = q.astype(jnp.float32) * scale
+
+    def body(carry, ci):
+        m, l, acc = carry
+        ks = jax.lax.dynamic_slice_in_dim(k, ci * kc, kc, axis=2)
+        vs = jax.lax.dynamic_slice_in_dim(v, ci * kc, kc, axis=2)
+        ks = jnp.repeat(ks, rep, axis=1).astype(jnp.float32)
+        vs = jnp.repeat(vs, rep, axis=1).astype(jnp.float32)
+        s = jnp.einsum("bhqd,bhkd->bhqk", q32, ks)
+        qpos = q_start + jnp.arange(Tq)
+        kpos = kv_start + ci * kc + jnp.arange(kc)
+        mask = kpos[None, :] <= (qpos[:, None] + causal_offset)
+        if window is not None:
+            mask &= kpos[None, :] > (qpos[:, None] + causal_offset - window)
+        s = jnp.where(mask[None, None], s, -1e30)
+        m2 = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m2[..., None])
+        corr = jnp.exp(m - m2)
+        l2 = l * corr + jnp.sum(p, axis=-1)
+        acc2 = acc * corr[..., None] + jnp.einsum("bhqk,bhkd->bhqd", p, vs)
+        return (m2, l2, acc2), None
+
+    init = (jnp.full((B, H, Tq), -1e30, jnp.float32),
+            jnp.zeros((B, H, Tq), jnp.float32),
+            jnp.zeros((B, H, Tq, hd), jnp.float32))
+    (m, l, acc), _ = jax.lax.scan(body, init, jnp.arange(n_chunks))
+    return (acc / jnp.maximum(l, 1e-30)[..., None]).astype(q.dtype)
+
+
+def attention_train(params, cfg: AttnConfig, x, positions, return_kv=False):
+    """Full-sequence causal attention (training / prefill).
+
+    Sliding-window layers use a *static band*: each query block only visits
+    the KV slice [block_start - window, block_end), so cost is O(S * window)
+    instead of O(S^2).
+
+    Sharding: Megatron-SP pattern pinned by explicit constraints — the
+    sequence-sharded residual stream is all-gathered once at attention entry,
+    q shards on heads, k/v on kv-heads when divisible (else replicated: GQA
+    k/v are small). Without these pins SPMD propagation materializes fully
+    replicated K/V inside the flash loops (measured: ~450x collective blowup)."""
+    from repro.parallel.sharding import logical_constraint
+    B, S, _ = x.shape
+    H, G, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    q = (x @ wuse(params["wq"], x.dtype, (None, "heads"))).reshape(
+        B, S, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ wuse(params["wk"], x.dtype, (None, "kv"))).reshape(
+        B, S, G, hd).transpose(0, 2, 1, 3)
+    v = (x @ wuse(params["wv"], x.dtype, (None, "kv"))).reshape(
+        B, S, G, hd).transpose(0, 2, 1, 3)
+    q = logical_constraint(q, ("batch", "act_heads", None, None))
+    k = logical_constraint(k, ("batch", "act_kv", None, None))
+    v = logical_constraint(v, ("batch", "act_kv", None, None))
+    q = apply_rope(q, positions[:, None, :], cfg.rope_theta)
+    k = apply_rope(k, positions[:, None, :], cfg.rope_theta)
+
+    S_real = S
+    qc = min(cfg.q_chunk, S)
+    qpad = (-S) % qc
+    if qpad:
+        # pad queries (outputs trimmed) — padded keys are causally invisible
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, qpad), (0, 0)))
+        S = S + qpad
+    n_q = S // qc
+    W = cfg.sliding_window
+
+    if W is not None and W < S:
+        band = int(2 ** math.ceil(math.log2(W + qc)))   # static KV band
+        band = min(band, k.shape[2])
+
+        def qblock(qi):
+            qs = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=2)
+            start = jnp.maximum(qi * qc + qc - band, 0)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, band, axis=2)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, band, axis=2)
+            return _chunked_attention(qs, ks, vs, qi * qc, start, 0, W)
+
+        out = jax.lax.map(qblock, jnp.arange(n_q))        # (n_q, B, H, qc, hd)
+    else:
+        def qblock(qi):
+            qs = jax.lax.dynamic_slice_in_dim(q, qi * qc, qc, axis=2)
+            return _chunked_attention(qs, k, v, qi * qc, 0, 0, W)
+
+        out = jax.lax.map(qblock, jnp.arange(n_q))
+
+    out = out.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    out = out[:, :, :S_real]
+    out = out.transpose(0, 2, 1, 3).reshape(B, S_real, H * hd)
+    out = out @ wuse(params["wo"], x.dtype, ("heads", None))
+    if return_kv:
+        # roped K/V (B, G, S, hd) for cache assembly
+        return out, (k[:, :, :S_real], v[:, :, :S_real])
+    return out
+
+
+def attention_decode(params, cfg: AttnConfig, x, cache_k, cache_v, cache_len):
+    """One-token decode against a KV cache.
+
+    cache_k/v: (B, G, C, hd) — C = full context for dense layers, or the
+    ring-buffer window for SWA layers. Returns (out, new_k, new_v)."""
+    B, _, _ = x.shape
+    H, G, hd = cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    C = cache_k.shape[2]
+    q = (x @ params["wq"].astype(x.dtype)).reshape(B, 1, H, hd).transpose(0, 2, 1, 3)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(B, 1, G, hd).transpose(0, 2, 1, 3)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(B, 1, G, hd).transpose(0, 2, 1, 3)
+    pos = cache_len[:, None, None]                       # (B,1,1) true position
+    q = apply_rope(q, pos, cfg.rope_theta)
+    k = apply_rope(k, pos, cfg.rope_theta)
+
+    # ring-buffer write via where (a one-hot MULTIPLY update made SPMD
+    # all-gather the whole cache in f32 — 17 GB/token on yi decode_32k;
+    # the where + explicit cache-layout pins keep the update shard-local)
+    from repro.parallel.sharding import logical_constraint
+    slot = jnp.mod(cache_len, C)                         # (B,)
+    is_slot = (jnp.arange(C)[None, :] == slot[:, None])[:, None, :, None]
+    cache_k = jnp.where(is_slot, k, cache_k)
+    cache_v = jnp.where(is_slot, v, cache_v)
+    cache_k = logical_constraint(cache_k, ("batch", "kv_heads", "cache", "head_dim"))
+    cache_v = logical_constraint(cache_v, ("batch", "kv_heads", "cache", "head_dim"))
+
+    rep = H // G
+    # Grouped-query einsum DIRECTLY against the cache: no jnp.repeat — the
+    # broadcast made SPMD all-gather the f32-converted cache along its
+    # sharded length (2 x 17 GB/token measured on yi decode_32k). bf16 reads
+    # with f32 accumulation also halve the dominant HBM (cache-stream) term.
+    q5 = (q / math.sqrt(hd)).astype(cache_k.dtype).reshape(B, G, rep, 1, hd)
+    s = jnp.einsum("bgrqd,bgkd->bgrqk", q5, cache_k,
+                   preferred_element_type=jnp.float32)
+    # valid = slots < cache_len+1 (ring: all slots valid once wrapped)
+    ages = jnp.arange(C)[None, :]
+    valid = ages < jnp.minimum(cache_len + 1, C)[:, None]
+    s = jnp.where(valid[:, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bgrqk,bgkd->bgrqd", p.astype(cache_v.dtype), cache_v,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(B, H, 1, hd).transpose(0, 2, 1, 3).reshape(B, 1, H * hd)
+    return out @ params["wo"].astype(x.dtype), cache_k, cache_v
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d, d_ff):
+    ks = jax.random.split(key, 3)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "w_gate": truncated_normal(ks[0], (d, d_ff), s),
+        "w_up": truncated_normal(ks[1], (d, d_ff), s),
+        "w_down": truncated_normal(ks[2], (d_ff, d), 1.0 / math.sqrt(d_ff)),
+    }
+    specs = {"w_gate": (EMBED, MLP), "w_up": (EMBED, MLP), "w_down": (MLP, EMBED)}
+    return params, specs
+
+
+def mlp(params, x):
+    dt = x.dtype
+    g = x @ wuse(params["w_gate"], dt, (None, "mlp"))
+    u = x @ wuse(params["w_up"], dt, (None, "mlp"))
+    return (jax.nn.silu(g) * u) @ wuse(params["w_down"], dt, ("mlp", None))
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_init(key, vocab, d):
+    params = {"table": truncated_normal(key, (vocab, d), 1.0)}
+    return params, {"table": (VOCAB, EMBED)}
+
+
+def embed(params, tokens, dtype):
+    return params["table"].astype(dtype)[tokens]
+
+
+def unembed_init(key, d, vocab):
+    params = {"w": truncated_normal(key, (d, vocab), 1.0 / math.sqrt(d))}
+    return params, {"w": (EMBED, VOCAB)}
+
+
+def unembed(params, x):
+    return x @ wuse(params["w"], x.dtype, (None, "vocab"))

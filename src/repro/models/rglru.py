@@ -1,0 +1,100 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The recurrence h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t) is a
+first-order linear recurrence — computed with ``jax.lax.associative_scan``
+over (a, b) pairs (log-depth on TPU), giving O(S) work: this is why the
+hybrid architecture runs the long_500k shape that full attention cannot.
+
+Block = [conv1d(width 4) -> RG-LRU] on the recurrent branch, gated by a GeLU
+branch, as in the paper. Decode carries (h, conv_tail) per layer: O(1) state.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import EMBED, RNN, truncated_normal
+
+C_CONST = 8.0   # Griffin's recurrence sharpness constant
+
+
+def rglru_init(key, d, d_rnn, conv_width: int = 4):
+    ks = jax.random.split(key, 7)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        "w_x": truncated_normal(ks[0], (d, d_rnn), s),        # recurrent branch in
+        "w_gate": truncated_normal(ks[1], (d, d_rnn), s),     # GeLU gate branch
+        "w_out": truncated_normal(ks[2], (d_rnn, d), 1.0 / math.sqrt(d_rnn)),
+        "conv_w": truncated_normal(ks[3], (conv_width, d_rnn), 1.0 / math.sqrt(conv_width)),
+        "w_rg": truncated_normal(ks[4], (d_rnn, d_rnn), 1.0 / math.sqrt(d_rnn)),
+        "w_ig": truncated_normal(ks[5], (d_rnn, d_rnn), 1.0 / math.sqrt(d_rnn)),
+        # Lambda parametrizes a in (0,1): a = sigmoid(lam) ** (c * r_t)
+        "lam": 0.65 + 0.2 * jax.random.uniform(ks[6], (d_rnn,), jnp.float32),
+    }
+    specs = {"w_x": (EMBED, RNN), "w_gate": (EMBED, RNN), "w_out": (RNN, EMBED),
+             "conv_w": (None, RNN), "w_rg": (RNN, RNN), "w_ig": (RNN, RNN),
+             "lam": (RNN,)}
+    return params, specs
+
+
+def _causal_conv(w, x, tail=None):
+    """width-W causal depthwise conv. x: (B, S, d). tail: (B, W-1, d)."""
+    W = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i].astype(x.dtype) for i in range(W))
+    return out, xp[:, -(W - 1):]
+
+
+def _rg_lru_scan(params, u, h0=None):
+    """u: (B, S, d_rnn) post-conv activations; returns (y, h_last)."""
+    f32 = jnp.float32
+    r = jax.nn.sigmoid((u @ params["w_rg"].astype(u.dtype)).astype(f32))
+    i = jax.nn.sigmoid((u @ params["w_ig"].astype(u.dtype)).astype(f32))
+    log_a0 = jax.nn.log_sigmoid(params["lam"].astype(f32))          # (d,)
+    log_a = C_CONST * r * log_a0[None, None, :]                     # (B,S,d)
+    a = jnp.exp(log_a)
+    b = jnp.sqrt(jnp.maximum(1.0 - jnp.exp(2.0 * log_a), 1e-12)) * (
+        i * u.astype(f32))
+
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(f32))
+
+    def combine(c1, c2):
+        a1, b1 = c1
+        a2, b2 = c2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h.astype(u.dtype), h[:, -1]
+
+
+def rglru_train(params, x, return_state=False):
+    """Full block over a sequence: (B, S, d) -> (B, S, d)."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype))
+    u = x @ params["w_x"].astype(x.dtype)
+    u, tail = _causal_conv(params["conv_w"], u)
+    h, h_last = _rg_lru_scan(params, u)
+    out = (h * gate) @ params["w_out"].astype(x.dtype)
+    if return_state:
+        return out, (h_last, tail)
+    return out
+
+
+def rglru_decode(params, x, h_prev, conv_tail):
+    """One-step decode. x: (B, 1, d); h_prev: (B, d_rnn);
+    conv_tail: (B, W-1, d_rnn). Returns (out, h, conv_tail)."""
+    gate = jax.nn.gelu(x @ params["w_gate"].astype(x.dtype))
+    u = x @ params["w_x"].astype(x.dtype)
+    u, new_tail = _causal_conv(params["conv_w"], u, conv_tail)
+    h_seq, h_last = _rg_lru_scan(params, u, h0=h_prev)
+    out = (h_seq * gate) @ params["w_out"].astype(x.dtype)
+    return out, h_last, new_tail
+
+
+def rglru_state_init(batch, d_rnn, conv_width, dtype):
+    return (jnp.zeros((batch, d_rnn), jnp.float32),
+            jnp.zeros((batch, conv_width - 1, d_rnn), dtype))

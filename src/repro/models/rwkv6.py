@@ -1,0 +1,179 @@
+"""RWKV-6 "Finch" block (arXiv:2404.05892): attention-free time mixing with
+data-dependent per-channel decay, + squared-ReLU channel mixing.
+
+Time mixing is computed in **chunked linear-attention form** (the standard
+GLA/RWKV chunk trick): within a chunk of length C the intra-chunk term is a
+masked (C x C) matmul weighted by cumulative decays; across chunks a per-head
+(hd x hd) state carries, updated with the chunk's total decay. Work is
+O(S * C * hd) — sub-quadratic, so rwkv6 runs the long_500k shape.
+
+Decode is the plain recurrence on the (H, hd, hd) state: O(1) per token.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .layers import EMBED, HEADS, MLP, truncated_normal
+
+HEAD_SIZE = 64
+CHUNK = 64
+# Per-step log-decay clamp: the matmul form uses exp(-cum) factors whose
+# exponents are bounded by |logw|*CHUNK; clamping keeps them inside f32 range
+# (|0.35|*64 ~ e^22). Real RWKV kernels avoid this with sequential fp32 state;
+# our TPU chunk form trades a bounded decay floor for MXU throughput
+# (deviation documented in DESIGN.md; decay_base init makes the clamp
+# inactive at initialization).
+LOGW_MIN = -0.35
+
+
+def rwkv6_init(key, d, d_ff):
+    H = d // HEAD_SIZE
+    ks = jax.random.split(key, 12)
+    s = 1.0 / math.sqrt(d)
+    params = {
+        # time mixing
+        "w_r": truncated_normal(ks[0], (d, d), s),
+        "w_k": truncated_normal(ks[1], (d, d), s),
+        "w_v": truncated_normal(ks[2], (d, d), s),
+        "w_g": truncated_normal(ks[3], (d, d), s),
+        "w_o": truncated_normal(ks[4], (d, d), s),
+        "w_decay": truncated_normal(ks[5], (d, d), 0.1 * s),   # data-dependent decay
+        "decay_base": -6.0 + jax.random.uniform(ks[6], (d,), jnp.float32),
+        "bonus_u": 0.5 * jax.random.uniform(ks[7], (d,), jnp.float32),
+        # token-shift mix coefficients (static flavor of v6 LoRA mixing)
+        "mix_r": jax.random.uniform(ks[8], (d,), jnp.float32),
+        "mix_kv": jax.random.uniform(ks[9], (d,), jnp.float32),
+        # channel mixing
+        "cm_k": truncated_normal(ks[10], (d, d_ff), s),
+        "cm_v": truncated_normal(ks[11], (d_ff, d), 1.0 / math.sqrt(d_ff)),
+    }
+    specs = {
+        "w_r": (EMBED, HEADS), "w_k": (EMBED, HEADS), "w_v": (EMBED, HEADS),
+        "w_g": (EMBED, HEADS), "w_o": (HEADS, EMBED), "w_decay": (EMBED, HEADS),
+        "decay_base": (HEADS,), "bonus_u": (HEADS,),
+        "mix_r": (EMBED,), "mix_kv": (EMBED,),
+        "cm_k": (EMBED, MLP), "cm_v": (MLP, EMBED),
+    }
+    return params, specs
+
+
+def _token_shift(x, mix, last=None):
+    """x_t' = x_t * mix + x_{t-1} * (1-mix). last: (B, 1, d) carry."""
+    if last is None:
+        last = jnp.zeros_like(x[:, :1])
+    prev = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return x * mix.astype(x.dtype) + prev * (1.0 - mix).astype(x.dtype), x[:, -1:]
+
+
+def _heads(x, H):
+    B, S, d = x.shape
+    return x.reshape(B, S, H, HEAD_SIZE).transpose(0, 2, 1, 3)   # (B,H,S,hd)
+
+
+def _wkv_chunked(r, k, v, w, u, state0=None):
+    """Chunked WKV. r,k,v,w: (B,H,S,hd) f32; w = per-step decay in (0,1);
+    u: (H, hd) bonus. Returns (out (B,H,S,hd), state (B,H,hd,hd))."""
+    B, H, S, hd = r.shape
+    C = min(CHUNK, S)
+    n = S // C
+    rc = r.reshape(B, H, n, C, hd)
+    kc = k.reshape(B, H, n, C, hd)
+    vc = v.reshape(B, H, n, C, hd)
+    logw = jnp.maximum(jnp.log(jnp.maximum(w, 1e-8)), LOGW_MIN).reshape(B, H, n, C, hd)
+    cum = jnp.cumsum(logw, axis=3)                      # inclusive decay prefix
+    total = cum[:, :, :, -1:]                           # (B,H,n,1,hd)
+
+    if state0 is None:
+        state0 = jnp.zeros((B, H, hd, hd), jnp.float32)
+
+    def chunk_step(state, ci):
+        rs, ks_, vs, cs, tot = (rc[:, :, ci], kc[:, :, ci], vc[:, :, ci],
+                                cum[:, :, ci], total[:, :, ci])
+        # inter-chunk: r_t decayed into the carried state
+        r_dec = rs * jnp.exp(cs - logw.reshape(B, H, n, C, hd)[:, :, ci])  # decay BEFORE t
+        inter = jnp.einsum("bhck,bhkd->bhcd", r_dec, state)
+        # intra-chunk: A[t,s] = sum_c r[t,c] e^{cum_t - logw_t - cum_s} k[s,c], s<t
+        r_w = rs * jnp.exp(cs - logw.reshape(B, H, n, C, hd)[:, :, ci])
+        k_w = ks_ * jnp.exp(-cs)
+        A = jnp.einsum("bhtc,bhsc->bhts", r_w, k_w)
+        mask = jnp.tril(jnp.ones((C, C), jnp.float32), k=-1)
+        A = A * mask[None, None]
+        intra = jnp.einsum("bhts,bhsd->bhtd", A, vs)
+        # current-token bonus: (r_t . (u * k_t)) v_t
+        bonus = jnp.einsum("bhtc,bhtc->bht", rs, u[None, :, None, :] * ks_)
+        out = inter + intra + bonus[..., None] * vs
+        # state update: S' = diag(e^{tot}) S + sum_s e^{tot - cum_s} k_s v_s^T
+        k_dec = ks_ * jnp.exp(tot - cs)
+        state = jnp.exp(tot).transpose(0, 1, 3, 2) * state + jnp.einsum(
+            "bhsc,bhsd->bhcd", k_dec, vs)
+        return state, out
+
+    state, outs = jax.lax.scan(chunk_step, state0, jnp.arange(n))
+    out = outs.transpose(1, 2, 0, 3, 4).reshape(B, H, S, hd)
+    return out, state
+
+
+def rwkv6_time_mix(params, x, shift_last=None, wkv_state=None):
+    """(B, S, d) -> (B, S, d); returns (out, (shift_last, wkv_state))."""
+    B, S, d = x.shape
+    H = d // HEAD_SIZE
+    xr, last = _token_shift(x, params["mix_r"], shift_last)
+    xkv, _ = _token_shift(x, params["mix_kv"], shift_last)
+
+    r = _heads(xr @ params["w_r"].astype(x.dtype), H).astype(jnp.float32)
+    k = _heads(xkv @ params["w_k"].astype(x.dtype), H).astype(jnp.float32)
+    v = _heads(xkv @ params["w_v"].astype(x.dtype), H).astype(jnp.float32)
+    g = jax.nn.silu(x @ params["w_g"].astype(x.dtype))
+
+    # data-dependent decay (v6): w_t = exp(-exp(base + W_d x_t)) in (0,1)
+    dd = (xkv @ params["w_decay"].astype(x.dtype)).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(params["decay_base"][None, None] + dd))
+    w = _heads(w.astype(jnp.float32), H)
+    u = params["bonus_u"].reshape(H, HEAD_SIZE)
+
+    out, state = _wkv_chunked(r, k, v, w, u, wkv_state)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, d).astype(x.dtype)
+    out = (out * g) @ params["w_o"].astype(x.dtype)
+    return out, (last, state)
+
+
+def rwkv6_time_mix_decode(params, x, shift_last, wkv_state):
+    """O(1) recurrence for one token. x: (B, 1, d)."""
+    B, _, d = x.shape
+    H = d // HEAD_SIZE
+    mix_r, mix_kv = params["mix_r"], params["mix_kv"]
+    xr = x * mix_r.astype(x.dtype) + shift_last * (1 - mix_r).astype(x.dtype)
+    xkv = x * mix_kv.astype(x.dtype) + shift_last * (1 - mix_kv).astype(x.dtype)
+
+    r = _heads(xr @ params["w_r"].astype(x.dtype), H)[:, :, 0].astype(jnp.float32)
+    k = _heads(xkv @ params["w_k"].astype(x.dtype), H)[:, :, 0].astype(jnp.float32)
+    v = _heads(xkv @ params["w_v"].astype(x.dtype), H)[:, :, 0].astype(jnp.float32)
+    g = jax.nn.silu(x @ params["w_g"].astype(x.dtype))
+
+    dd = (xkv @ params["w_decay"].astype(x.dtype)).astype(jnp.float32)
+    w = jnp.exp(jnp.maximum(-jnp.exp(params["decay_base"][None, None] + dd),
+                            LOGW_MIN))   # same clamp as the chunked form
+    w = _heads(w, H)[:, :, 0]                                     # (B,H,hd)
+    u = params["bonus_u"].reshape(H, HEAD_SIZE)
+
+    kv = jnp.einsum("bhc,bhd->bhcd", k, v)
+    out = jnp.einsum("bhc,bhcd->bhd", r, wkv_state + u[None, :, :, None] * kv)
+    new_state = w[..., None] * wkv_state + kv
+    out = out.reshape(B, 1, d).astype(x.dtype)
+    out = (out * g) @ params["w_o"].astype(x.dtype)
+    return out, (x, new_state)
+
+
+def rwkv6_channel_mix(params, x, shift_last=None):
+    xs, last = _token_shift(x, params["mix_kv"], shift_last)
+    h = jnp.square(jax.nn.relu(xs @ params["cm_k"].astype(x.dtype)))
+    return h @ params["cm_v"].astype(x.dtype), last
+
+
+def rwkv6_state_init(batch, d, dtype):
+    H = d // HEAD_SIZE
+    return (jnp.zeros((batch, 1, d), dtype),                     # token-shift tail
+            jnp.zeros((batch, H, HEAD_SIZE, HEAD_SIZE), jnp.float32))  # wkv state

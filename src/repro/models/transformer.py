@@ -1,0 +1,499 @@
+"""Composable decoder stack: dense / MoE / hybrid-recurrent / RWKV blocks,
+scan-over-layers, train forward + loss, and O(1)-state serve step.
+
+The stack is declared by ``pattern`` — a repeating tuple of block kinds:
+
+    dense:  [RMSNorm -> GQA attention -> +] [RMSNorm -> SwiGLU -> +]
+    local:  same, attention windowed to cfg.local_window
+    moe:    attention block + top-k MoE FFN
+    rglru:  RG-LRU recurrent block + SwiGLU
+    rwkv:   RWKV6 time mix + RWKV6 channel mix
+
+``n_layers = len(pattern) * n_blocks + len(tail)``; the majority runs under a
+single ``lax.scan`` over stacked block params (small HLO, fast SPMD compile),
+the remainder (``n_layers mod len(pattern)``) as explicit tail layers —
+e.g. recurrentgemma-9b's 38 = (rglru, rglru, local) x 12 + (rglru, rglru).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.sharding import logical_constraint
+from . import layers as L
+from . import moe as M
+from . import rglru as R
+from . import rwkv6 as W
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                    # dense|moe|hybrid|ssm|vlm|audio
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    rope_theta: float = 1_000_000.0
+    sliding_window: Optional[int] = None     # SWA for 'dense' blocks
+    pattern: tuple = ("dense",)
+    n_experts: int = 0
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    d_rnn: int = 0                 # rglru width (0 -> d_model)
+    conv_width: int = 4
+    local_window: int = 2048
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+    remat: str = "dots"            # full | dots | none
+    q_chunk: int = 512
+    kv_chunk: int = 1024
+    num_patches: int = 576         # vlm stub patches (prepended)
+    sub_quadratic: bool = False    # may run long_500k
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def n_blocks(self) -> int:
+        return self.n_layers // len(self.pattern)
+
+    @property
+    def tail(self) -> tuple:
+        return self.pattern[: self.n_layers % len(self.pattern)]
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def attn_cfg(self, local: bool) -> L.AttnConfig:
+        return L.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            rope_theta=self.rope_theta,
+            sliding_window=self.local_window if local else self.sliding_window,
+            q_chunk=self.q_chunk, kv_chunk=self.kv_chunk)
+
+    def moe_cfg(self) -> M.MoEConfig:
+        return M.MoEConfig(self.n_experts, self.top_k, self.capacity_factor)
+
+    def param_count(self) -> int:
+        """Analytic total parameters (for 6ND roofline accounting)."""
+        d, ff, hd = self.d_model, self.d_ff, self.hd
+        attn = d * self.n_heads * hd * 2 + d * self.n_kv_heads * hd * 2
+        mlp = 3 * d * ff
+        per = {"dense": attn + mlp, "local": attn + mlp,
+               "moe": attn + d * self.n_experts + 3 * d * ff * self.n_experts,
+               "rglru": 2 * d * (self.d_rnn or d) + (self.d_rnn or d) * d
+                        + 2 * (self.d_rnn or d) ** 2 + mlp,
+               "rwkv": 6 * d * d + 3 * d * ff}
+        kinds = list(self.pattern) * self.n_blocks + list(self.tail)
+        total = sum(per[k] for k in kinds)
+        total += self.vocab_size * d                      # embed
+        total += d * self.vocab_size                      # lm head
+        return total
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top_k of n_experts)."""
+        if "moe" not in self.pattern:
+            return self.param_count()
+        d, ff = self.d_model, self.d_ff
+        full = self.param_count()
+        inactive = (self.n_experts - self.top_k) * 3 * d * ff
+        n_moe = sum(1 for k in list(self.pattern) * self.n_blocks + list(self.tail)
+                    if k == "moe")
+        return full - n_moe * inactive
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def _block_init(key, cfg: ModelConfig, kind: str):
+    ks = jax.random.split(key, 4)
+    d = cfg.d_model
+    p, s = {}, {}
+    p["norm1"], s["norm1"] = L.rmsnorm_init(d)
+    p["norm2"], s["norm2"] = L.rmsnorm_init(d)
+    if kind in ("dense", "local", "moe"):
+        p["attn"], s["attn"] = L.attention_init(ks[0], cfg.attn_cfg(kind == "local"))
+        if kind == "moe":
+            p["moe"], s["moe"] = M.moe_init(ks[1], d, cfg.d_ff, cfg.moe_cfg())
+        else:
+            p["mlp"], s["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff)
+    elif kind == "rglru":
+        p["rnn"], s["rnn"] = R.rglru_init(ks[0], d, cfg.d_rnn or d, cfg.conv_width)
+        p["mlp"], s["mlp"] = L.mlp_init(ks[1], d, cfg.d_ff)
+    elif kind == "rwkv":
+        p["tm"], s["tm"] = W.rwkv6_init(ks[0], d, cfg.d_ff)
+    else:
+        raise ValueError(kind)
+    return p, s
+
+
+def init_params(key, cfg: ModelConfig):
+    """Returns (params, specs) — specs hold logical-axis tuples."""
+    keys = jax.random.split(key, 8)
+    params: dict = {}
+    specs: dict = {}
+
+    if cfg.family != "audio":
+        params["embed"], specs["embed"] = L.embed_init(keys[0], cfg.vocab_size,
+                                                       cfg.d_model)
+    # stacked pattern blocks (specs are static: take them from one example
+    # init — dead-code-eliminated under jit/eval_shape)
+    for pi, kind in enumerate(cfg.pattern):
+        bkeys = jax.random.split(jax.random.fold_in(keys[1], pi), cfg.n_blocks)
+        p = jax.vmap(lambda k: _block_init(k, cfg, kind)[0])(bkeys)
+        s = _block_init(jax.random.PRNGKey(0), cfg, kind)[1]
+        params[f"blocks_{pi}"] = p
+        specs[f"blocks_{pi}"] = jax.tree.map(
+            lambda names: (L.LAYERS,) + tuple(names), s,
+            is_leaf=lambda x: isinstance(x, tuple))
+    # tail blocks
+    for ti, kind in enumerate(cfg.tail):
+        p, s = _block_init(jax.random.fold_in(keys[2], ti), cfg, kind)
+        params[f"tail_{ti}"] = p
+        specs[f"tail_{ti}"] = s
+
+    params["norm_f"], specs["norm_f"] = L.rmsnorm_init(cfg.d_model)
+    params["lm_head"], specs["lm_head"] = L.unembed_init(keys[3], cfg.d_model,
+                                                         cfg.vocab_size)
+    return params, specs
+
+
+def abstract_params(cfg: ModelConfig):
+    """(ShapeDtypeStruct params, specs) — dry-run: no allocation.
+
+    Specs are static python data assembled at trace time; capture them from
+    the eval_shape trace (arrays abstracted, specs side-channeled)."""
+    captured = {}
+
+    def build(key):
+        p, s = init_params(key, cfg)
+        captured["specs"] = s
+        return p
+
+    shapes = jax.eval_shape(build, jax.random.PRNGKey(0))
+    return shapes, captured["specs"]
+
+
+def param_specs(cfg: ModelConfig):
+    return abstract_params(cfg)[1]
+
+
+# ---------------------------------------------------------------------------
+# train forward
+# ---------------------------------------------------------------------------
+
+def _apply_block(p, cfg: ModelConfig, kind: str, x, positions):
+    if kind in ("dense", "local", "moe"):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        x = x + L.attention_train(p["attn"], cfg.attn_cfg(kind == "local"), h,
+                                  positions)
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, aux = M.moe_apply(p["moe"], cfg.moe_cfg(), h)
+            return x + y, aux
+        return x + L.mlp(p["mlp"], h), 0.0
+    if kind == "rglru":
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        x = x + R.rglru_train(p["rnn"], h)
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        return x + L.mlp(p["mlp"], h), 0.0
+    if kind == "rwkv":
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, _ = W.rwkv6_time_mix(p["tm"], h)
+        x = x + y
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, _ = W.rwkv6_channel_mix(p["tm"], h)
+        return x + y, 0.0
+    raise ValueError(kind)
+
+
+def _remat(cfg: ModelConfig, fn):
+    if cfg.remat == "none":
+        return fn
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+    return jax.checkpoint(fn)
+
+
+def inputs_to_embeddings(params, cfg: ModelConfig, batch):
+    """Map the modality front (stubbed for vlm/audio) to (B, S, d) + positions."""
+    dt = cfg.compute_dtype
+    if cfg.family == "audio":
+        x = batch["frame_embeds"].astype(dt)
+    elif cfg.family == "vlm":
+        tok = L.embed(params["embed"], batch["tokens"], dt)
+        x = jnp.concatenate([batch["patch_embeds"].astype(dt), tok], axis=1)
+    else:
+        x = L.embed(params["embed"], batch["tokens"], dt)
+    B, S = x.shape[0], x.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32), (B, S))
+    return x, positions
+
+
+def forward_train(params, cfg: ModelConfig, batch):
+    """Full-sequence forward. Returns (logits_f32, aux_loss)."""
+    x, positions = inputs_to_embeddings(params, cfg, batch)
+    x = logical_constraint(x, ("batch", "seq", "act_embed"))
+    aux = jnp.zeros((), jnp.float32)
+
+    def body(carry, block_ps):
+        x, aux = carry
+        for pi, kind in enumerate(cfg.pattern):
+            x, a = _apply_block(block_ps[pi], cfg, kind, x, positions)
+            x = logical_constraint(x, ("batch", "seq", "act_embed"))
+            aux = aux + a
+        return (x, aux), None
+
+    # xs = tuple of per-pattern-position stacks (heterogeneous structures ok)
+    xs = tuple(params[f"blocks_{pi}"] for pi in range(len(cfg.pattern)))
+    (x, aux), _ = jax.lax.scan(_remat(cfg, body), (x, aux), xs)
+
+    for ti, kind in enumerate(cfg.tail):
+        x, a = _apply_block(params[f"tail_{ti}"], cfg, kind, x, positions)
+        aux = aux + a
+
+    x = L.rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["lm_head"], x).astype(jnp.float32)
+    logits = logical_constraint(logits, ("batch", "seq", "vocab"))
+    return logits, aux
+
+
+def loss_fn(params, cfg: ModelConfig, batch, aux_weight: float = 0.01,
+            z_weight: float = 1e-4):
+    """Causal-LM cross entropy (+ MoE aux + z-loss). labels < 0 are masked.
+    For vlm, labels cover only the text positions (suffix of the sequence)."""
+    logits, aux = forward_train(params, cfg, batch)
+    labels = batch["labels"]
+    if cfg.family == "vlm":
+        logits = logits[:, -labels.shape[1]:]
+    mask = (labels >= 0).astype(jnp.float32)
+    safe = jnp.maximum(labels, 0)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+    ce = jnp.sum((lse - ll) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    zl = jnp.sum(jnp.square(lse) * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return ce + aux_weight * aux + z_weight * zl, (ce, aux)
+
+
+def _apply_block_prefill(p, cfg: ModelConfig, kind: str, x, positions,
+                         cache_len: int):
+    """Like _apply_block but also emits the decode-state entry (ring cache /
+    recurrent state) so serving can continue from a prefill."""
+    S = x.shape[1]
+
+    def ring(k):
+        # place position p at ring slot p % C (decode's write discipline)
+        C = cache_len if kind != "local" else min(cache_len, cfg.local_window)
+        if kind in ("dense", "moe") and cfg.sliding_window is not None:
+            C = min(cache_len, cfg.sliding_window)
+        C = min(C, cache_len)
+        lastC = k[:, :, -min(C, S):]
+        if lastC.shape[2] < C:
+            lastC = jnp.pad(lastC, ((0, 0), (0, 0), (0, C - lastC.shape[2]),
+                                    (0, 0)))
+            return lastC          # S <= C: slots 0..S-1 already correct
+        return jnp.roll(lastC, S % C, axis=2)
+
+    if kind in ("dense", "local", "moe"):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        a, (k, v) = L.attention_train(p["attn"], cfg.attn_cfg(kind == "local"),
+                                      h, positions, return_kv=True)
+        x = x + a
+        st = {"k": ring(k), "v": ring(v)}
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, _ = M.moe_apply(p["moe"], cfg.moe_cfg(), h)
+            return x + y, st
+        return x + L.mlp(p["mlp"], h), st
+    if kind == "rglru":
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, (hl, tail) = R.rglru_train(p["rnn"], h, return_state=True)
+        x = x + y
+        st = {"h": hl, "conv": tail}
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        return x + L.mlp(p["mlp"], h), st
+    if kind == "rwkv":
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, (shift, wkv) = W.rwkv6_time_mix(p["tm"], h)
+        x = x + y
+        h2 = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, cm_shift = W.rwkv6_channel_mix(p["tm"], h2)
+        return x + y, {"shift_tm": shift, "wkv": wkv, "shift_cm": cm_shift}
+    raise ValueError(kind)
+
+
+def forward_prefill(params, cfg: ModelConfig, batch, cache_len: int):
+    """Full-prompt forward that ALSO builds the decode state (KV ring caches
+    at their correct slots / final recurrent states). Returns
+    (logits_f32, decode_state) ready for serve_step continuation."""
+    x, positions = inputs_to_embeddings(params, cfg, batch)
+    B, S = x.shape[0], x.shape[1]
+
+    def body(x, block_ps):
+        sts = []
+        for pi, kind in enumerate(cfg.pattern):
+            x, st = _apply_block_prefill(block_ps[pi], cfg, kind, x, positions,
+                                         cache_len)
+            sts.append(st)
+        return x, tuple(sts)
+
+    xs = tuple(params[f"blocks_{pi}"] for pi in range(len(cfg.pattern)))
+    x, stacked_states = jax.lax.scan(body, x, xs)
+
+    state = {"pos": jnp.full((B,), S, jnp.int32)}
+    for pi in range(len(cfg.pattern)):
+        state[f"blocks_{pi}"] = stacked_states[pi]
+    for ti, kind in enumerate(cfg.tail):
+        x, st = _apply_block_prefill(params[f"tail_{ti}"], cfg, kind, x,
+                                     positions, cache_len)
+        state[f"tail_{ti}"] = st
+
+    x = L.rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["lm_head"], x).astype(jnp.float32)
+    return logits, state
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step)
+# ---------------------------------------------------------------------------
+
+def _block_state_init(cfg: ModelConfig, kind: str, batch: int, cache_len: int):
+    dt = cfg.compute_dtype
+    G, hd = cfg.n_kv_heads, cfg.hd
+    if kind in ("dense", "moe"):
+        C = cache_len if cfg.sliding_window is None else min(
+            cache_len, cfg.sliding_window)
+        return {"k": jnp.zeros((batch, G, C, hd), dt),
+                "v": jnp.zeros((batch, G, C, hd), dt)}
+    if kind == "local":
+        C = min(cache_len, cfg.local_window)
+        return {"k": jnp.zeros((batch, G, C, hd), dt),
+                "v": jnp.zeros((batch, G, C, hd), dt)}
+    if kind == "rglru":
+        h, tail = R.rglru_state_init(batch, cfg.d_rnn or cfg.d_model,
+                                     cfg.conv_width, dt)
+        return {"h": h, "conv": tail}
+    if kind == "rwkv":
+        s1, wkv = W.rwkv6_state_init(batch, cfg.d_model, dt)
+        return {"shift_tm": s1, "wkv": wkv,
+                "shift_cm": jnp.zeros_like(s1)}
+    raise ValueError(kind)
+
+
+def decode_state_init(cfg: ModelConfig, batch: int, cache_len: int):
+    """Per-layer decode state + the position counter."""
+    state = {}
+    for pi, kind in enumerate(cfg.pattern):
+        one = _block_state_init(cfg, kind, batch, cache_len)
+        state[f"blocks_{pi}"] = jax.tree.map(
+            lambda t: jnp.broadcast_to(t, (cfg.n_blocks,) + t.shape), one)
+    for ti, kind in enumerate(cfg.tail):
+        state[f"tail_{ti}"] = _block_state_init(cfg, kind, batch, cache_len)
+    state["pos"] = jnp.zeros((batch,), jnp.int32)
+    return state
+
+
+def _block_state_specs(kind: str):
+    if kind in ("dense", "moe", "local"):
+        return {"k": ("batch", "kv_heads", "cache", "head_dim"),
+                "v": ("batch", "kv_heads", "cache", "head_dim")}
+    if kind == "rglru":
+        return {"h": ("batch", "rnn"), "conv": ("batch", None, "rnn")}
+    if kind == "rwkv":
+        return {"shift_tm": ("batch", None, "act_embed"),
+                "wkv": ("batch", "heads", None, None),
+                "shift_cm": ("batch", None, "act_embed")}
+    raise ValueError(kind)
+
+
+def decode_state_specs(cfg: ModelConfig):
+    """Logical-axis spec tree matching decode_state_init."""
+    specs = {}
+    for pi, kind in enumerate(cfg.pattern):
+        specs[f"blocks_{pi}"] = jax.tree.map(
+            lambda names: ("layers",) + tuple(names), _block_state_specs(kind),
+            is_leaf=lambda x: isinstance(x, tuple))
+    for ti, kind in enumerate(cfg.tail):
+        specs[f"tail_{ti}"] = _block_state_specs(kind)
+    specs["pos"] = ("batch",)
+    return specs
+
+
+def _apply_block_decode(p, st, cfg: ModelConfig, kind: str, x, pos):
+    if kind in ("dense", "local", "moe"):
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        a, nk, nv = L.attention_decode(p["attn"], cfg.attn_cfg(kind == "local"),
+                                       h, st["k"], st["v"], pos)
+        x = x + a
+        st = {"k": nk, "v": nv}
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        if kind == "moe":
+            y, _ = M.moe_apply(p["moe"], cfg.moe_cfg(), h)
+            return x + y, st
+        return x + L.mlp(p["mlp"], h), st
+    if kind == "rglru":
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, nh, ntail = R.rglru_decode(p["rnn"], h, st["h"], st["conv"])
+        x = x + y
+        st = {"h": nh, "conv": ntail}
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        return x + L.mlp(p["mlp"], h), st
+    if kind == "rwkv":
+        h = L.rmsnorm(p["norm1"], x, cfg.norm_eps)
+        y, (nshift, nwkv) = W.rwkv6_time_mix_decode(p["tm"], h, st["shift_tm"],
+                                                    st["wkv"])
+        x = x + y
+        h = L.rmsnorm(p["norm2"], x, cfg.norm_eps)
+        y, ncm = W.rwkv6_channel_mix(p["tm"], h, st["shift_cm"])
+        return x + y, {"shift_tm": nshift, "wkv": nwkv, "shift_cm": ncm}
+    raise ValueError(kind)
+
+
+def serve_step(params, cfg: ModelConfig, state, inputs):
+    """One decode step: new token(s) in, logits + updated state out."""
+    dt = cfg.compute_dtype
+    if cfg.family == "audio":
+        x = inputs["frame_embeds"].astype(dt)          # (B, 1, d)
+    else:
+        x = L.embed(params["embed"], inputs["token"][:, None], dt)
+    pos = state["pos"]
+    x = logical_constraint(x, ("batch", None, "act_embed"))
+
+    new_state = {"pos": pos + 1}
+
+    def body(x, xs):
+        block_ps, block_sts = xs
+        sts = []
+        for pi, kind in enumerate(cfg.pattern):
+            x, ns = _apply_block_decode(block_ps[pi], block_sts[pi], cfg, kind,
+                                        x, pos)
+            sts.append(ns)
+        return x, tuple(sts)
+
+    xs_p = tuple(params[f"blocks_{pi}"] for pi in range(len(cfg.pattern)))
+    xs_s = tuple(state[f"blocks_{pi}"] for pi in range(len(cfg.pattern)))
+    x, out_states = jax.lax.scan(body, x, (xs_p, xs_s))
+    for pi in range(len(cfg.pattern)):
+        new_state[f"blocks_{pi}"] = out_states[pi]
+
+    for ti, kind in enumerate(cfg.tail):
+        x, ns = _apply_block_decode(params[f"tail_{ti}"], state[f"tail_{ti}"],
+                                    cfg, kind, x, pos)
+        new_state[f"tail_{ti}"] = ns
+
+    x = L.rmsnorm(params["norm_f"], x, cfg.norm_eps)
+    logits = L.unembed(params["lm_head"], x).astype(jnp.float32)[:, 0]
+    return logits, new_state

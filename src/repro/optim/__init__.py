@@ -1,0 +1,5 @@
+"""Optimizer substrate."""
+from . import adamw, schedule
+from .adamw import AdamWConfig, AdamWState
+
+__all__ = ["adamw", "schedule", "AdamWConfig", "AdamWState"]

@@ -1,0 +1,4 @@
+"""Distribution substrate: logical-axis sharding rules + gradient compression."""
+from . import sharding
+
+__all__ = ["sharding"]

@@ -1,0 +1,206 @@
+"""Logical-axis sharding rules (MaxText-style) for params and activations.
+
+Params/activations carry *logical* axis names; a rule set maps them to mesh
+axes ('pod', 'data', 'model'). Presets (chosen for the production mesh
+(data=16, model=16) [+ pod=2], with divisibility across all 10 archs):
+
+  * ``train``    — baseline training: FSDP + TP + SP.
+                   batch->('pod','data'), activation seq->'model' (Megatron
+                   sequence parallelism: the scan carry is 1/16th per chip,
+                   which is what lets 4k x 256 fit v5e HBM), param embed dim
+                   ->'data' (ZeRO-3: per-layer all-gather under the scan),
+                   heads/kv/mlp/vocab/rnn->'model'. Expert dim is REPLICATED
+                   and expert FFNs shard on their mlp dim — uniform across 8-
+                   and 16-expert archs on a 16-way axis (see DESIGN.md).
+  * ``train_tp`` — pure TP+SP (no FSDP) — hillclimb comparison point.
+  * ``train_ep`` — expert-parallel MoE (expert->'model'); valid only when
+                   n_experts % model == 0 (phi3.5's 16) — hillclimb option.
+  * ``decode``   — serving: batch->('pod','data'), KV-cache length->'model'
+                   (keeps the 32k cache ~1-3 GB/chip), kv heads replicated
+                   (GQA counts of 1/2/4/8 don't divide 16), params TP on
+                   projection dims.
+  * ``decode_b1``— single-sequence long-context decode: batch unsharded,
+                   window/cache->'data', heads->'model'.
+
+The active (mesh, rules) pair is process-global, installed by the launcher;
+model code calls ``logical_constraint`` which is a no-op outside a mesh so
+smoke tests run unsharded on one device.
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def _mk(**over):
+    base = {
+        "batch": ("pod", "data"), "seq": None, "act_embed": None,
+        "act_heads": "model", "act_kv": "model", "embed": None,
+        "heads": "model", "kv": "model",
+        "head_dim": None, "mlp": "model", "vocab": "model", "expert": None,
+        "rnn": "model", "layers": None, "kv_heads": None, "cache": None,
+    }
+    base.update(over)
+    return base
+
+
+_PRESETS = {
+    "train": _mk(seq="model", embed="data"),
+    "train_tp": _mk(seq="model"),
+    "train_tp_nosp": _mk(),
+    "train_ep": _mk(seq="model", embed="data", expert="model", mlp=None),
+    # pure ZeRO-3: batch over BOTH intra-pod axes (B_loc=1), params sharded
+    # over both, zero TP/SP traffic. Wins whenever per-layer activation
+    # collectives exceed param gathers (measured 14-19x on MoE train cells —
+    # EXPERIMENTS.md SSPerf); 'pod' stays outer DP for the multipod mesh.
+    "train_dp": _mk(batch=("pod", "data", "model"), seq=None,
+                    embed=("data", "model"), heads=None, kv=None, mlp=None,
+                    vocab=None, rnn=None, act_heads=None, act_kv=None,
+                    _moe_shardmap=True),
+    # true expert parallelism: experts owned by 'model' ranks (needs
+    # n_experts % 16 == 0, e.g. phi3.5's 16), FSDP over 'data', pure-DP
+    # batch. Tokens a2a to their experts instead of gathering expert weights.
+    "train_dp_ep": _mk(batch=("pod", "data", "model"), seq=None,
+                       embed=("data",), expert="model", heads=None, kv=None,
+                       mlp=None, vocab=None, rnn=None, act_heads=None,
+                       act_kv=None, _moe_ep=True),
+    "decode": _mk(cache="model", _moe_dense=True),
+    "decode_b1": _mk(batch=None, cache="data", _moe_dense=True),
+    # MoE prefill: TP+SP like 'train' but with dispatch-free dense MoE
+    "prefill_moe": _mk(seq="model", embed="data", _moe_dense=True),
+    # multipod MoE training: global batch (256) < chips (512) rules out the
+    # pure-DP shard_map layout, and SPMD dispatch under TP replicates
+    # (SSPerf H1-H6) — dense-MoE gives the known-good TP schedule at E/k
+    # extra expert FLOPs. Seq-aware shard_map dispatch is logged future work.
+    "train_multi_moe": _mk(seq="model", embed="data", _moe_dense=True),
+}
+
+_ACTIVE = {"mesh": None, "rules": _PRESETS["train"]}
+
+
+def presets():
+    return dict(_PRESETS)
+
+
+def set_active(mesh: Optional[Mesh], rules="train"):
+    _ACTIVE["mesh"] = mesh
+    _ACTIVE["rules"] = _PRESETS[rules] if isinstance(rules, str) else rules
+
+
+@contextlib.contextmanager
+def use(mesh: Optional[Mesh], rules="train"):
+    prev = dict(_ACTIVE)
+    set_active(mesh, rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.update(prev)
+
+
+def active_mesh() -> Optional[Mesh]:
+    return _ACTIVE["mesh"]
+
+
+def flag(name: str) -> bool:
+    """Non-axis boolean flags carried in the rules dict (keys start with _)."""
+    return bool(_ACTIVE["rules"].get(name, False))
+
+
+def axes_for(name: str, dim: int | None = None) -> tuple:
+    """The mesh axes logical ``name`` resolves to (dims-aware, with the same
+    prefix-fallback as tensor sharding)."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return ()
+    spec = _resolve((name,), dims=(dim,) if dim is not None else None)
+    m = spec[0] if len(spec) else None
+    if m is None:
+        return ()
+    return m if isinstance(m, tuple) else (m,)
+
+
+def batch_axes(dim: int | None = None) -> tuple:
+    """Mesh axes the 'batch' logical axis maps to (dims-aware)."""
+    return axes_for("batch", dim)
+
+
+def _divisible(dim: Optional[int], n: int) -> bool:
+    return dim is None or dim % n == 0
+
+
+def _resolve(names, rules=None, mesh=None, dims=None) -> P:
+    """Map logical names -> PartitionSpec, dropping axes that are absent from
+    the mesh, already used, or that don't divide the tensor dim."""
+    rules = rules or _ACTIVE["rules"]
+    mesh = mesh or _ACTIVE["mesh"]
+    axes = []
+    used = set()
+    mesh_shape = dict(zip(mesh.axis_names, mesh.devices.shape)) if mesh is not None else None
+    for i, n in enumerate(names):
+        dim = None if dims is None else dims[i]
+        if n is None:
+            axes.append(None)
+            continue
+        m = rules.get(n)
+        if isinstance(m, tuple):
+            m = tuple(a for a in m
+                      if (mesh_shape is None or a in mesh_shape) and a not in used)
+            if m and mesh_shape is not None:
+                # longest PREFIX whose axis product divides the dim (e.g.
+                # batch 256 on (pod,data,model)=512 falls back to
+                # (pod,data)=32 on the multipod mesh)
+                while m:
+                    total = 1
+                    for a in m:
+                        total *= mesh_shape[a]
+                    if _divisible(dim, total):
+                        break
+                    m = m[:-1]
+            m = m if m else None
+        elif m is not None and mesh_shape is not None:
+            if m not in mesh_shape or m in used or not _divisible(dim, mesh_shape[m]):
+                m = None
+        elif m is not None and m in used:
+            m = None
+        if m is not None:
+            used.update(m if isinstance(m, tuple) else [m])
+        axes.append(m)
+    return P(*axes)
+
+
+def spec_for(names, rules=None, mesh=None, dims=None) -> P:
+    """PartitionSpec for a tuple of logical axis names."""
+    return _resolve(tuple(names), rules, mesh, dims)
+
+
+def tree_specs(spec_tree, rules=None, mesh=None, shape_tree=None):
+    """Map a pytree of logical-name-tuples to PartitionSpecs. If shape_tree
+    is given (matching pytree of ShapeDtypeStructs/arrays), axes that don't
+    divide the corresponding dim are dropped (e.g. kv=4 heads on a 16 axis)."""
+    is_names = lambda x: isinstance(x, tuple)
+    if shape_tree is None:
+        return jax.tree.map(lambda names: _resolve(tuple(names), rules, mesh),
+                            spec_tree, is_leaf=is_names)
+    return jax.tree.map(
+        lambda names, arr: _resolve(tuple(names), rules, mesh,
+                                    dims=tuple(arr.shape)),
+        spec_tree, shape_tree, is_leaf=is_names)
+
+
+def tree_shardings(spec_tree, mesh=None, rules=None, shape_tree=None):
+    mesh = mesh or _ACTIVE["mesh"]
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        tree_specs(spec_tree, rules, mesh, shape_tree),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def logical_constraint(x, names):
+    """with_sharding_constraint by logical names; no-op without a mesh."""
+    mesh = _ACTIVE["mesh"]
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(mesh, _resolve(tuple(names), dims=tuple(x.shape))))

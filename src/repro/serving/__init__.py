@@ -1,0 +1,7 @@
+"""Serving substrate: Dash prefix cache + paged KV pool + batched engine."""
+from . import engine, kv_cache, prefix_cache
+from .engine import Request, ServingEngine, snapshot_search
+from .prefix_cache import BLOCK, DashPrefixCache
+
+__all__ = ["engine", "kv_cache", "prefix_cache", "Request", "ServingEngine",
+           "snapshot_search", "BLOCK", "DashPrefixCache"]

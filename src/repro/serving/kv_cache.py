@@ -1,0 +1,119 @@
+"""Paged KV storage: a page pool per layer-stack + gather-based assembly.
+
+Pages hold BLOCK tokens of roped K/V for every layer (stacked layout matches
+the decode state: (n_blocks_layers, B?, G, BLOCK, hd) per page, flattened to
+a pool). Assembly of a request's contiguous ring cache from its page list is
+one gather — the compute saved is the prefill of the cached prefix, which the
+engine accounts for (that is the paper's payoff in the serving integration).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.transformer import ModelConfig
+from .prefix_cache import BLOCK
+
+
+@dataclasses.dataclass
+class PagePoolConfig:
+    num_pages: int
+    cfg: ModelConfig
+
+
+class PagePool:
+    """Device-resident page pool for one attention-pattern position.
+
+    storage: dict per pattern position pi ->
+        k/v: (num_pages, n_blocks, G, BLOCK, hd)
+    Recurrent archs store per-page final states instead (state snapshots)."""
+
+    def __init__(self, pc: PagePoolConfig):
+        self.pc = pc
+        cfg = pc.cfg
+        dt = cfg.compute_dtype
+        self.storage = {}
+        for pi, kind in enumerate(cfg.pattern):
+            if kind in ("dense", "local", "moe"):
+                shape = (pc.num_pages, cfg.n_blocks, cfg.n_kv_heads, BLOCK, cfg.hd)
+                self.storage[pi] = {"k": jnp.zeros(shape, dt),
+                                    "v": jnp.zeros(shape, dt)}
+            elif kind == "rglru":
+                d = cfg.d_rnn or cfg.d_model
+                self.storage[pi] = {
+                    "h": jnp.zeros((pc.num_pages, cfg.n_blocks, d), jnp.float32),
+                    "conv": jnp.zeros((pc.num_pages, cfg.n_blocks,
+                                       cfg.conv_width - 1, d), dt)}
+            elif kind == "rwkv":
+                H = cfg.d_model // 64
+                self.storage[pi] = {
+                    "shift_tm": jnp.zeros((pc.num_pages, cfg.n_blocks, 1,
+                                           cfg.d_model), dt),
+                    "wkv": jnp.zeros((pc.num_pages, cfg.n_blocks, H, 64, 64),
+                                     jnp.float32),
+                    "shift_cm": jnp.zeros((pc.num_pages, cfg.n_blocks, 1,
+                                           cfg.d_model), dt)}
+
+    def store_request(self, pages: List[int], state_entry: dict, pi: int,
+                      kind: str, batch_index: int, n_prompt: int):
+        """Write a finished prefill's cache into pages (one request).
+        For attention: page j holds tokens [j*BLOCK, (j+1)*BLOCK).
+        For recurrent: page j holds the state SNAPSHOT after block j —
+        here we store the final state into the last page (snapshot chain
+        is refined incrementally in production; simplified to final-state)."""
+        if kind in ("dense", "local", "moe"):
+            k = state_entry["k"][:, batch_index]      # (L, G, C, hd) ring
+            v = state_entry["v"][:, batch_index]
+            C = k.shape[2]
+            for j, page in enumerate(pages):
+                sl = [(j * BLOCK + t) % C for t in range(BLOCK)]
+                self.storage[pi]["k"] = self.storage[pi]["k"].at[page].set(
+                    jnp.transpose(k[:, :, jnp.asarray(sl)], (0, 1, 2, 3)))
+                self.storage[pi]["v"] = self.storage[pi]["v"].at[page].set(
+                    v[:, :, jnp.asarray(sl)])
+        elif kind == "rglru":
+            if pages:
+                self.storage[pi]["h"] = self.storage[pi]["h"].at[pages[-1]].set(
+                    state_entry["h"][:, batch_index])
+                self.storage[pi]["conv"] = self.storage[pi]["conv"].at[pages[-1]].set(
+                    state_entry["conv"][:, batch_index])
+        elif kind == "rwkv":
+            if pages:
+                for f in ("shift_tm", "wkv", "shift_cm"):
+                    self.storage[pi][f] = self.storage[pi][f].at[pages[-1]].set(
+                        state_entry[f][:, batch_index])
+
+    def gather_into_cache(self, pages: List[int], pi: int, kind: str,
+                          state_entry: dict, batch_index: int):
+        """Assemble the cached prefix into a request's decode-state entry."""
+        if not pages:
+            return state_entry
+        if kind in ("dense", "local", "moe"):
+            pk = self.storage[pi]["k"][jnp.asarray(pages)]   # (P, L, G, B, hd)
+            pv = self.storage[pi]["v"][jnp.asarray(pages)]
+            C = state_entry["k"].shape[3]
+            flat_k = jnp.concatenate([pk[j] for j in range(len(pages))], axis=2)
+            flat_v = jnp.concatenate([pv[j] for j in range(len(pages))], axis=2)
+            n = flat_k.shape[2]
+            k = state_entry["k"].at[:, batch_index, :, :min(n, C)].set(
+                flat_k[:, :, :min(n, C)])
+            v = state_entry["v"].at[:, batch_index, :, :min(n, C)].set(
+                flat_v[:, :, :min(n, C)])
+            return {"k": k, "v": v}
+        if kind == "rglru":
+            return {
+                "h": state_entry["h"].at[:, batch_index].set(
+                    self.storage[pi]["h"][pages[-1]]),
+                "conv": state_entry["conv"].at[:, batch_index].set(
+                    self.storage[pi]["conv"][pages[-1]])}
+        if kind == "rwkv":
+            out = dict(state_entry)
+            for f in ("shift_tm", "wkv", "shift_cm"):
+                out[f] = state_entry[f].at[:, batch_index].set(
+                    self.storage[pi][f][pages[-1]])
+            return out
+        return state_entry

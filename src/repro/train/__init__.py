@@ -1,0 +1,4 @@
+"""Training loop substrate: composed steps + fault-tolerant trainer."""
+from . import steps
+
+__all__ = ["steps"]

@@ -1,0 +1,64 @@
+"""Composed jittable steps: train (fwd+bwd+AdamW), prefill, decode.
+
+These are the functions the dry-run lowers and the trainer executes. All
+sharding is carried by in/out shardings + logical constraints; the functions
+themselves are mesh-agnostic.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer import (ModelConfig, forward_train, loss_fn,
+                                      serve_step)
+from repro.optim import adamw
+from repro.optim.schedule import cosine_warmup
+
+
+class TrainState(NamedTuple):
+    params: dict
+    opt: adamw.AdamWState
+    step: jnp.ndarray
+
+
+def train_state_init(params) -> TrainState:
+    return TrainState(params=params, opt=adamw.init(params),
+                      step=jnp.zeros((), jnp.int32))
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: adamw.AdamWConfig = adamw.AdamWConfig(),
+                    peak_lr: float = 3e-4):
+    """(state, batch) -> (state, metrics). Grad all-reduce over DP is implicit
+    in the SPMD partition (mean over the global batch)."""
+
+    def step(state: TrainState, batch):
+        (loss, (ce, aux)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(state.params, cfg, batch)
+        lr = cosine_warmup(state.step, peak_lr=peak_lr)
+        params, opt, om = adamw.update(opt_cfg, grads, state.opt, state.params, lr)
+        metrics = {"loss": loss, "ce": ce, "aux": aux, "lr": lr, **om}
+        return TrainState(params, opt, state.step + 1), metrics
+
+    return step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    """Forward-only (inference prefill): logits of the full prompt."""
+
+    def step(params, batch):
+        logits, _ = forward_train(params, cfg, batch)
+        return logits
+
+    return step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One decode token against the KV cache / recurrent state."""
+
+    def step(params, state, inputs):
+        return serve_step(params, cfg, state, inputs)
+
+    return step

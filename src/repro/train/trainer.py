@@ -1,0 +1,145 @@
+"""Fault-tolerant training loop: checkpoint/restart, failure handling,
+straggler monitoring, elastic resize hooks.
+
+Mirrors the paper's recovery philosophy at trainer scale:
+  * periodic atomic commits (async), `clean` marker flipped on graceful stop;
+  * a step failure (device loss, NaN, injected fault) triggers restore from
+    the last commit — restore itself is *instant* (manifest only) and tensor
+    bytes stream in lazily;
+  * the straggler monitor tracks per-step wall time and flags hosts whose
+    step time exceeds mean + k*sigma — at fleet scale the runbook response is
+    hot-spare swap + elastic re-mesh (launch/elastic.py), which we exercise
+    in tests by shrinking the device mesh and resharding the checkpoint.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import Callable, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.models.transformer import ModelConfig, init_params
+from repro.train.steps import TrainState, make_train_step, train_state_init
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    total_steps: int = 100
+    checkpoint_every: int = 20
+    checkpoint_dir: str = "/tmp/repro_ckpt"
+    keep_checkpoints: int = 3
+    async_checkpoint: bool = True
+    max_restarts: int = 3
+    straggler_window: int = 20
+    straggler_sigma: float = 3.0
+    peak_lr: float = 3e-4
+
+
+class StragglerMonitor:
+    """Per-step wall-time outlier detection (host-side)."""
+
+    def __init__(self, window: int, sigma: float):
+        self.times = deque(maxlen=window)
+        self.sigma = sigma
+        self.flagged = []
+
+    def record(self, step: int, seconds: float) -> bool:
+        is_straggler = False
+        if len(self.times) >= max(5, self.times.maxlen // 2):
+            mean = float(np.mean(self.times))
+            std = float(np.std(self.times)) + 1e-9
+            if seconds > mean + self.sigma * std:
+                self.flagged.append((step, seconds, mean))
+                is_straggler = True
+        self.times.append(seconds)
+        return is_straggler
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tcfg: TrainerConfig,
+                 data_iter: Iterator[dict],
+                 fault_hook: Optional[Callable[[int], None]] = None,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.data_iter = data_iter
+        self.fault_hook = fault_hook          # raises to simulate failures
+        self.ckpt = CheckpointManager(tcfg.checkpoint_dir, tcfg.keep_checkpoints)
+        self.monitor = StragglerMonitor(tcfg.straggler_window,
+                                        tcfg.straggler_sigma)
+        self.step_fn = jax.jit(make_train_step(cfg, peak_lr=tcfg.peak_lr),
+                               donate_argnums=(0,))
+        params, _ = init_params(jax.random.PRNGKey(seed), cfg)
+        self.state = train_state_init(params)
+        self.metrics_log = []
+        self.restarts = 0
+        self.version = 1
+
+    # -- recovery ---------------------------------------------------------
+
+    def _restore(self):
+        self.ckpt.wait()          # an in-flight async commit must land first
+        manifest, lazy, secs = self.ckpt.restore_manifest()
+        if manifest is None:
+            raise RuntimeError("no checkpoint to restore from")
+        self.version = manifest["version"]
+        self.state = self.ckpt.restore_tree(self.state, lazy)
+        return manifest["step"], secs
+
+    def resume_if_possible(self) -> Optional[int]:
+        if self.ckpt.latest_step() is None:
+            return None
+        step, secs = self._restore()
+        return step
+
+    # -- main loop --------------------------------------------------------
+
+    def run(self) -> dict:
+        step = int(np.asarray(self.state.step))
+        while step < self.tcfg.total_steps:
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in next(self.data_iter).items()}
+            t0 = time.perf_counter()
+            try:
+                if self.fault_hook is not None:
+                    self.fault_hook(step)
+                self.state, metrics = self.step_fn(self.state, batch)
+                loss = float(np.asarray(metrics["loss"]))
+                if not np.isfinite(loss):
+                    raise FloatingPointError(f"non-finite loss at step {step}")
+            except Exception as e:                      # failure path
+                self.restarts += 1
+                if self.restarts > self.tcfg.max_restarts:
+                    raise
+                restored_step, secs = self._restore()
+                self.metrics_log.append(
+                    {"step": step, "event": "restart", "error": repr(e),
+                     "restored_step": restored_step,
+                     "manifest_restore_s": secs})
+                step = restored_step
+                # rebuild jit (a real device failure would re-init the mesh)
+                self.step_fn = jax.jit(
+                    make_train_step(self.cfg, peak_lr=self.tcfg.peak_lr),
+                    donate_argnums=(0,))
+                continue
+
+            dt = time.perf_counter() - t0
+            straggler = self.monitor.record(step, dt)
+            self.metrics_log.append({"step": step, "loss": loss,
+                                     "seconds": dt, "straggler": straggler})
+            step += 1
+            if step % self.tcfg.checkpoint_every == 0:
+                self.ckpt.save(step, self.state, clean=False,
+                               version=self.version,
+                               blocking=not self.tcfg.async_checkpoint)
+        # graceful shutdown: final clean commit (paper's clean marker)
+        self.ckpt.wait()
+        self.ckpt.save(step, self.state, clean=True, version=self.version,
+                       blocking=True)
+        return {"final_step": step, "restarts": self.restarts,
+                "stragglers": list(self.monitor.flagged),
+                "log": self.metrics_log}

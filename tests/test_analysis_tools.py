@@ -1,0 +1,67 @@
+"""Unit tests for the roofline tooling: HLO parser trip-count correction and
+collective wire-byte accounting (the numbers EXPERIMENTS.md relies on)."""
+import textwrap
+
+from repro.launch import hlo_analysis
+
+
+HLO = textwrap.dedent("""\
+    HloModule test
+
+    %body (p: (s32[], f32[8,8])) -> (s32[], f32[8,8]) {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %a = f32[8,8]{1,0} get-tuple-element(%p), index=1
+      %b = f32[8,8]{1,0} parameter(1)
+      %dot.1 = f32[8,8]{1,0} dot(%a, %b), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %ar = f32[8,8]{1,0} all-reduce(%dot.1), replica_groups=[16,16]<=[256], to_apply=%add
+      ROOT %t = (s32[], f32[8,8]) tuple(%i, %ar)
+    }
+
+    %cond (p: (s32[], f32[8,8])) -> pred[] {
+      %p = (s32[], f32[8,8]) parameter(0)
+      %c = s32[] constant(4)
+      ROOT %lt = pred[] compare(%i, %c), direction=LT
+    }
+
+    ENTRY %main (x: f32[8,8]) -> f32[8,8] {
+      %x = f32[8,8]{1,0} parameter(0)
+      %w = f32[8,8]{1,0} parameter(1)
+      %dot.0 = f32[8,8]{1,0} dot(%x, %w), lhs_contracting_dims={1}, rhs_contracting_dims={0}
+      %wl = (s32[], f32[8,8]) while(%t0), condition=%cond, body=%body, backend_config={"known_trip_count":{"n":"4"}}
+      %ag = f32[8,8]{1,0} all-gather(%x), replica_groups=[16,16]<=[256], dimensions={0}
+      ROOT %r = f32[8,8]{1,0} get-tuple-element(%wl), index=1
+    }
+""")
+
+
+def test_trip_count_correction():
+    res = hlo_analysis.analyze(HLO)
+    one_dot = 2 * 8 * 8 * 8            # 2*M*N*K
+    # entry dot once + body dot x4 trips
+    assert res["dot_flops"] == one_dot * (1 + 4)
+
+
+def test_collective_wire_accounting():
+    res = hlo_analysis.analyze(HLO)
+    sz = 8 * 8 * 4                     # f32[8,8]
+    n = 16                             # groups of 16
+    # body all-reduce x4 trips (2*size*(n-1)/n) + entry all-gather once
+    want_ar = 4 * 2 * sz * (n - 1) / n
+    want_ag = sz * (n - 1) / n
+    assert abs(res["collectives"]["all-reduce"] - want_ar) < 1e-6
+    assert abs(res["collectives"]["all-gather"] - want_ag) < 1e-6
+    assert res["collective_counts"]["all-reduce"] == 4
+
+
+def test_roofline_loader_on_artifacts():
+    import glob
+    if not glob.glob("experiments/dryrun/pod/*.json"):
+        import pytest
+        pytest.skip("no sweep artifacts")
+    from benchmarks import roofline
+    recs = roofline.load_records("pod")
+    ok = [r for r in recs if r["status"] == "ok"]
+    assert len(ok) == 34
+    for r in ok:
+        assert r["compute_s"] >= 0 and r["memory_s"] > 0
+        assert r["dominant"] in ("compute", "memory", "collective")

@@ -1,0 +1,45 @@
+"""Hash function properties + jnp/numpy bit-exactness."""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing
+
+
+@given(st.integers(0, 2**64 - 1))
+@settings(max_examples=200, deadline=None)
+def test_np_jnp_bit_exact(key):
+    hi, lo = hashing.split_key(key)
+    for fn_np, fn_j in ((hashing.np_hash1, hashing.hash1),
+                        (hashing.np_hash2, hashing.hash2)):
+        a = fn_np(np.uint32(hi), np.uint32(lo))
+        b = np.asarray(fn_j(jnp.uint32(hi), jnp.uint32(lo)))
+        assert np.uint32(a) == b
+
+
+def test_avalanche():
+    """Flipping one input bit flips ~half the output bits on average."""
+    rng = np.random.default_rng(1)
+    keys = rng.integers(0, 2**63, 500, dtype=np.uint64)
+    hi, lo = hashing.np_split_keys(keys)
+    base = hashing.np_hash1(hi, lo)
+    flipped = hashing.np_hash1(hi, lo ^ np.uint32(1))
+    dist = np.unpackbits((base ^ flipped).view(np.uint8)).mean() * 8
+    assert 3.2 < dist < 4.8, dist
+
+
+def test_fingerprint_distribution():
+    rng = np.random.default_rng(2)
+    keys = rng.integers(0, 2**63, 20000, dtype=np.uint64)
+    hi, lo = hashing.np_split_keys(keys)
+    fps = hashing.np_hash2(hi, lo) & 0xFF
+    counts = np.bincount(fps.astype(int), minlength=256)
+    assert counts.min() > 20 and counts.max() < 180    # ~78 +- noise
+
+
+def test_fold_words_identity_stable():
+    rng = np.random.default_rng(3)
+    w = rng.integers(0, 2**32, (50, 4), dtype=np.uint64).astype(np.uint32)
+    h1 = hashing.np_fold_words(w, hashing.FOLD_SEED_HI)
+    h2 = np.asarray(hashing.fold_words(jnp.asarray(w), hashing.FOLD_SEED_HI))
+    assert (h1 == h2).all()

@@ -1,0 +1,75 @@
+"""Pallas kernel sweeps vs pure-jnp oracles (exact integer equality)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DashConfig, DashEH, INSERTED
+from repro.core.hashing import np_split_keys
+from repro.kernels import ops, ref
+from repro.kernels.hashmix import BLOCK, bulk_hash
+from repro.kernels.probe import BQ, fingerprint_probe
+from tests.conftest import unique_keys
+
+
+@pytest.mark.parametrize("n", [BLOCK, 4 * BLOCK, 16 * BLOCK])
+@pytest.mark.parametrize("seed", [0, 1])
+def test_bulk_hash_sweep(n, seed):
+    rng = np.random.default_rng(seed)
+    hi = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32))
+    lo = jnp.asarray(rng.integers(0, 2**32, n, dtype=np.uint64).astype(np.uint32))
+    got = bulk_hash(hi, lo)
+    want = ref.bulk_hash_ref(hi, lo)
+    for g, w in zip(got, want):
+        np.testing.assert_array_equal(np.asarray(g), np.asarray(w))
+
+
+@pytest.mark.parametrize("segments,capacity", [(4, BQ), (8, 2 * BQ), (16, 4 * BQ)])
+@pytest.mark.parametrize("fill", [200, 2000])
+def test_probe_kernel_sweep(segments, capacity, fill, rng):
+    cfg = DashConfig(max_segments=segments, dir_depth_max=8)
+    t = DashEH(cfg)
+    keys = unique_keys(rng, fill)
+    t.insert(keys, np.arange(fill, dtype=np.uint32))
+    fp_pad, alloc = ops.plane_views(cfg, t.state)
+    hi, lo = np_split_keys(keys[:256])
+    qf, qb, qpb, qsrc, keep = ops.route_queries(
+        cfg, t.state, jnp.asarray(hi), jnp.asarray(lo), capacity)
+    kb, kp = fingerprint_probe(fp_pad, alloc, qf, qb, qpb)
+    rb, rp = ref.fingerprint_probe_ref(fp_pad, alloc, qf, qb, qpb)
+    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+
+
+def test_probe_routed_end_to_end(rng):
+    cfg = DashConfig(max_segments=16, dir_depth_max=8)
+    t = DashEH(cfg)
+    keys = unique_keys(rng, 4000)
+    vals = np.arange(4000, dtype=np.uint32)
+    assert (t.insert(keys, vals) == INSERTED).all()
+    hi, lo = np_split_keys(keys[:512])
+    f, v, keep = ops.probe_routed(cfg, t.state, jnp.asarray(hi), jnp.asarray(lo))
+    f, v, keep = map(np.asarray, (f, v, keep))
+    assert f[keep].all()
+    assert (v[keep] == vals[:512][keep]).all()
+    neg = np.setdiff1d(unique_keys(rng, 2000), keys)[:512]
+    nh, nl = np_split_keys(neg)
+    nf, _, nkeep = ops.probe_routed(cfg, t.state, jnp.asarray(nh), jnp.asarray(nl))
+    assert np.asarray(nf)[np.asarray(nkeep)].sum() == 0
+
+
+def test_probe_kernel_agrees_with_engine_search(rng):
+    """Kernel fast path == engine slow path on the same table."""
+    from repro.core import engine
+    cfg = DashConfig(max_segments=8, dir_depth_max=7)
+    t = DashEH(cfg)
+    keys = unique_keys(rng, 1500)
+    t.insert(keys, np.arange(1500, dtype=np.uint32))
+    probe = np.concatenate([keys[:300], np.setdiff1d(unique_keys(rng, 1000), keys)[:200]])
+    hi, lo = np_split_keys(probe)
+    f1, v1 = engine.search_batch(cfg, "eh", t.state, jnp.asarray(hi), jnp.asarray(lo))
+    f2, v2, keep = ops.probe_routed(cfg, t.state, jnp.asarray(hi), jnp.asarray(lo), capacity=512)
+    keep = np.asarray(keep)
+    np.testing.assert_array_equal(np.asarray(f1)[keep], np.asarray(f2)[keep])
+    hit = np.asarray(f1) & keep
+    np.testing.assert_array_equal(np.asarray(v1)[hit], np.asarray(v2)[hit])

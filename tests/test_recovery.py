@@ -1,0 +1,80 @@
+"""Crash-consistency + instant/lazy recovery (paper Sec. 4.8, Table 1, Fig 14)."""
+import numpy as np
+import pytest
+
+from repro.core import DashConfig, DashEH, DashLH, EXISTS, INSERTED, recovery
+from tests.conftest import unique_keys
+
+
+@pytest.mark.parametrize("cls,cfg", [
+    (DashEH, DashConfig(max_segments=32, dir_depth_max=8)),
+    (DashLH, DashConfig(max_segments=64, num_stash=4)),
+])
+def test_crash_recovery_full(cls, cfg, rng):
+    t = cls(cfg)
+    keys = unique_keys(rng, 5000)
+    vals = (np.arange(5000) % 2**32).astype(np.uint32)
+    t.insert(keys, vals)
+    t.crash(np.random.default_rng(1), lock_frac=0.2, n_dups=8,
+            wipe_overflow=True, interrupt_smo=(cls is DashEH))
+    work = t.restart()
+    assert work["seconds"] < 0.5          # instant: O(1)
+    f, v = t.search(keys)                  # lazy recovery on access
+    assert f.all() and (v == vals).all()
+    assert t.n_items == 5000               # duplicates removed exactly
+    neg = np.setdiff1d(unique_keys(rng, 3000), keys)[:500]
+    f2, _ = t.search(neg)
+    assert f2.sum() == 0                   # no phantoms from stale overflow
+    s = t.insert(keys[:64], vals[:64])
+    assert (s == EXISTS).all()             # uniqueness intact
+
+
+def test_instant_restart_constant_in_size(rng):
+    """Table 1: restart work must not scale with data size."""
+    times = []
+    for n in (500, 2000, 8000):
+        t = DashEH(DashConfig(max_segments=64, dir_depth_max=10))
+        t.insert(unique_keys(rng, n), np.zeros(n, np.uint32))
+        t.crash(np.random.default_rng(0), n_dups=0)
+        times.append(t.restart()["seconds"])
+    assert max(times) < 0.25
+    assert max(times) < 50 * max(min(times), 1e-5)   # no linear blowup
+
+
+def test_clean_shutdown_skips_recovery(rng):
+    t = DashEH(DashConfig(max_segments=16, dir_depth_max=6))
+    keys = unique_keys(rng, 1000)
+    t.insert(keys, np.zeros(1000, np.uint32))
+    t.graceful_shutdown()
+    t.restart()
+    t.search(keys[:50])
+    assert t.recovered_segments == 0
+
+
+def test_lazy_recovery_amortized(rng):
+    """Fig. 14: only touched segments are recovered."""
+    t = DashEH(DashConfig(max_segments=32, dir_depth_max=8))
+    keys = unique_keys(rng, 6000)
+    t.insert(keys, np.zeros(6000, np.uint32))
+    segs_total = t.n_segments
+    t.crash(np.random.default_rng(2), n_dups=2)
+    t.restart()
+    t.search(keys[:8])          # touches few segments
+    assert 0 < t.recovered_segments < segs_total
+
+
+def test_smo_continuation(rng):
+    """A split interrupted between phases is finished on first access."""
+    from repro.core import dash_eh, layout
+    import jax.numpy as jnp
+    cfg = DashConfig(max_segments=16, dir_depth_max=6)
+    t = DashEH(cfg)
+    keys = unique_keys(rng, 1200)
+    t.insert(keys, np.arange(1200, dtype=np.uint32))
+    # force a mid-SMO crash on segment 0
+    t.state, _ = dash_eh.split_phase1(cfg, t.state, jnp.asarray(0, jnp.int32))
+    t.state = t.state._replace(clean=jnp.asarray(False))
+    t.restart()
+    f, v = t.search(keys)
+    assert f.all() and (v == np.arange(1200, dtype=np.uint32)).all()
+    assert (np.asarray(t.state.seg_state) == layout.SEG_NORMAL).all()
