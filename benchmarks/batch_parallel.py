@@ -1,0 +1,117 @@
+"""Segment-parallel engine vs sequential scan engine (the PR's tentpole).
+
+Measures ops/sec for batched inserts (scan vs segment-parallel routing) and
+batched search (per-key vmap vs Pallas fingerprint-routed) at batch sizes
+256/1k/4k on a pre-grown table (uniform keys -> many segments, which is the
+regime the paper's per-segment concurrency argument addresses; a fresh
+2-segment table has no parallelism to exploit and the host planner keeps it
+on the scan engine).
+
+Before timing, asserts the two write engines produce bit-identical table
+state + statuses and the two read paths identical results — the bench is
+also a differential check. Emits ``BENCH_batch_parallel.json``.
+"""
+from __future__ import annotations
+
+import json
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DashConfig, DashEH, engine, hashing
+from .common import Row, ops_row, time_op, unique_keys
+
+BATCHES = (256, 1024, 4096)
+
+
+def _copy_state(state):
+    return jax.tree.map(jnp.copy, state)
+
+
+def _assert_identical(sa, sb, tag):
+    for name, a, b in zip(sa._fields, jax.tree.leaves(sa), jax.tree.leaves(sb)):
+        assert (np.asarray(a) == np.asarray(b)).all(), (tag, name)
+
+
+def run():
+    cfg = DashConfig(max_segments=64, dir_depth_max=9)
+    t = DashEH(cfg)
+    rng = np.random.default_rng(0xBA7C)
+    pool = unique_keys(rng, 40_000)
+    warm, fresh = pool[:20_000], pool[20_000:]
+    t.insert(warm, np.arange(20_000, dtype=np.uint32))
+    base = t.state
+    n_segs = len(np.unique(np.asarray(base.dir)))
+
+    rows, report = [], {"segments": n_segs}
+    for B in BATCHES:
+        keys = fresh[:B]
+        hi_np, lo_np = hashing.np_split_keys(keys)
+        hi, lo = jnp.asarray(hi_np), jnp.asarray(lo_np)
+        vals = jnp.asarray(np.arange(B, dtype=np.uint32))
+
+        # host-side lane capacity, exactly like DashTable._write_plan
+        seg = np.asarray(base.dir)[hashing.np_hash1(hi_np, lo_np)
+                                   >> np.uint32(32 - cfg.dir_depth_max)]
+        cap = DashEH._lane_quantum(int(np.bincount(seg).max()))
+
+        # --- differential check before timing (bit-identical engines) ---
+        s_scan, st_scan, _ = engine.insert_batch(
+            cfg, "eh", _copy_state(base), hi, lo, vals, batching="scan")
+        s_seg, st_seg, _ = engine.insert_batch(
+            cfg, "eh", _copy_state(base), hi, lo, vals,
+            batching="segment", capacity=cap)
+        assert (np.asarray(st_scan) == np.asarray(st_seg)).all(), B
+        _assert_identical(s_scan, s_seg, f"insert@{B}")
+        f_v, v_v = engine.search_batch(cfg, "eh", s_scan, hi, lo,
+                                       batching="vmap")
+        f_p, v_p = engine.search_batch(cfg, "eh", s_scan, hi, lo,
+                                       batching="pallas", capacity=cap_pallas(cap))
+        assert (np.asarray(f_v) == np.asarray(f_p)).all(), B
+        assert (np.asarray(v_v) == np.asarray(v_p)).all(), B
+
+        # --- timings (state copy cost included identically in both) ---
+        t_scan = time_op(lambda: jax.block_until_ready(engine.insert_batch(
+            cfg, "eh", _copy_state(base), hi, lo, vals, batching="scan")[0].meta))
+        t_seg = time_op(lambda: jax.block_until_ready(engine.insert_batch(
+            cfg, "eh", _copy_state(base), hi, lo, vals,
+            batching="segment", capacity=cap)[0].meta))
+        t_vmap = time_op(lambda: jax.block_until_ready(engine.search_batch(
+            cfg, "eh", base, hi, lo, batching="vmap")[0]))
+        t_pall = time_op(lambda: jax.block_until_ready(engine.search_batch(
+            cfg, "eh", base, hi, lo, batching="pallas",
+            capacity=cap_pallas(cap))[0]))
+
+        report[f"batch_{B}"] = {
+            "lane_capacity": cap,
+            "insert_scan_ops_per_s": B / t_scan,
+            "insert_segment_ops_per_s": B / t_seg,
+            "insert_speedup": t_scan / t_seg,
+            "search_vmap_ops_per_s": B / t_vmap,
+            "search_pallas_ops_per_s": B / t_pall,
+            "search_speedup": t_vmap / t_pall,
+        }
+        rows += [
+            ops_row(f"batchpar/insert_scan@{B}", t_scan, B),
+            ops_row(f"batchpar/insert_segment@{B}", t_seg, B,
+                    extra=f"cap={cap}; {t_scan / t_seg:.2f}x vs scan"),
+            ops_row(f"batchpar/search_vmap@{B}", t_vmap, B),
+            ops_row(f"batchpar/search_pallas@{B}", t_pall, B,
+                    extra=f"{t_vmap / t_pall:.2f}x vs vmap"),
+        ]
+
+    with open("BENCH_batch_parallel.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+def cap_pallas(cap: int) -> int:
+    """Pallas routing capacity: same per-segment bound, BQ-aligned (the
+    kernel asserts C % 128 == 0; lane quanta like 192 are not)."""
+    return -(-max(128, cap) // 128) * 128
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

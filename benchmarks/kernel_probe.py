@@ -21,9 +21,21 @@ def run():
     hi, lo = np_split_keys(keys[:1024])
     hi, lo = jnp.asarray(hi), jnp.asarray(lo)
 
+    # result-equivalence gate before any timing: the Pallas-routed path must
+    # agree with the engine's per-key path on every kept lane (keep=False
+    # lanes overflowed routing capacity and are untouched by design)
+    f_eng, v_eng = engine.search_batch(cfg, "eh", t.state, hi, lo,
+                                       batching="vmap")
+    f_krn, v_krn, keep = ops.probe_routed(cfg, t.state, hi, lo, capacity=512)
+    keep = np.asarray(keep)
+    assert (np.asarray(f_eng)[keep] == np.asarray(f_krn)[keep]).all()
+    hit = np.asarray(f_eng) & keep
+    assert (np.asarray(v_eng)[hit] == np.asarray(v_krn)[hit]).all()
+    assert not np.asarray(f_krn)[~keep].any()   # dropped lanes stay untouched
+
     s_eng = time_op(lambda: jax.block_until_ready(
-        engine.search_batch(cfg, "eh", t.state, hi, lo)))
+        engine.search_batch(cfg, "eh", t.state, hi, lo, batching="vmap")))
     s_krn = time_op(lambda: jax.block_until_ready(
         ops.probe_routed(cfg, t.state, hi, lo, capacity=512)))
-    return [ops_row("kernel/engine_search", s_eng, 1024),
+    return [ops_row("kernel/engine_search(vmap)", s_eng, 1024),
             ops_row("kernel/pallas_probe_routed(interpret)", s_krn, 1024)]

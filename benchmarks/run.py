@@ -14,6 +14,7 @@ Modules map 1:1 to the paper's artifacts:
   fig15  allocator            preallocated pool vs grow-on-demand
   extra  dht_roofline         256-chip DHT fabric-vs-HBM accounting
   extra  kernel_probe         Pallas probe path timing (interpret)
+  extra  batch_parallel       segment-parallel vs scan engine (+ JSON artifact)
 """
 from __future__ import annotations
 
@@ -35,6 +36,7 @@ MODULES = [
     ("fig15", "benchmarks.allocator"),
     ("dht", "benchmarks.dht_roofline"),
     ("kernel", "benchmarks.kernel_probe"),
+    ("batchpar", "benchmarks.batch_parallel"),
 ]
 
 

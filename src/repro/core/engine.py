@@ -1,15 +1,33 @@
-"""Per-key Dash operations and batched (scan/vmap) APIs.
+"""Per-key Dash operations and the segment-parallel batched engine.
 
 The paper's Algorithm 1 (insert with bucket load balancing), Algorithm 3
 (search) and the delete procedure (Sec. 4.6), expressed as pure functions.
 
-Concurrency adaptation (DESIGN.md Sec. 2): a batch is the unit of
-serialization. ``insert_batch`` is a ``lax.scan`` whose carry is the table —
-sequentially consistent within the batch, in-place on device under donation.
-``search_batch`` is a lock-free ``vmap`` that writes nothing (the optimistic
-read of Sec. 4.4); version verification against a later state is provided for
-the host-level concurrent composition (see serving/engine.py and the Fig. 13
-benchmark).
+Batching & parallelism model
+----------------------------
+Dash's scalability claim rests on the *segment* being the unit of
+concurrency: operations on different segments never contend (Sec. 4.4).
+The batched engine mirrors that exactly:
+
+  - **segment = unit of parallelism.** Mutating batches are routed by
+    segment on device (the shared MoE-style dispatcher in
+    ``kernels/ops.py``) and all segments run in parallel (``vmap`` over the
+    segment axis); only the lanes *within* one segment are applied
+    sequentially (``lax.scan``) — the same granularity as the paper's
+    per-segment locks. Per-batch critical-path length drops from O(batch)
+    to O(max lanes per segment).
+  - **batch = unit of consistency.** The routing sort is stable, so lanes
+    of one segment keep batch order; segments are disjoint state, so the
+    resulting table is bit-identical to the sequential reference
+    (``batching="scan"``, kept for differential testing).
+  - **reads go through the Pallas fingerprint kernel by default.**
+    ``search_batch`` routes queries per segment and scans fingerprints on
+    the MXU/VPU (``kernels/probe.py``); only fingerprint hits load keys.
+    Stash lanes are covered by a dense compare inside the routed path;
+    capacity-overflow lanes and non-eligible configs (pointer mode,
+    fingerprints disabled, probe windows > 2) fall back to the per-key
+    ``vmap`` path. Lookups stay lock-free/optimistic (Sec. 4.4); version
+    verification for concurrent composition lives in serving/engine.py.
 
 Decision structure: every insert computes all candidate placements first
 (counts, movable slots, stash occupancy — all cheap packed-word reads), then a
@@ -379,17 +397,27 @@ def _dummy_words(cfg: DashConfig, n: int):
     return jnp.zeros((n, cfg.key_heap_words), U32)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2,))
-def insert_batch(cfg: DashConfig, mode: str, state: DashState,
-                 keys_hi, keys_lo, vals, words=None, valid=None):
-    """Sequentially-consistent batch insert (lax.scan carry = the table).
-    ``valid`` masks out padding lanes (host pads retry subsets to pow2 sizes
-    to avoid shape recompiles). Returns (state, statuses, any_stash_activation)."""
-    if words is None:
-        words = _dummy_words(cfg, keys_hi.shape[0])
-    if valid is None:
-        valid = jnp.ones(keys_hi.shape[0], jnp.bool_)
+def _pow2_at_least(n: int, floor: int = 8) -> int:
+    n = max(int(n), 1)
+    return max(floor, 1 << (n - 1).bit_length())
 
+
+def pallas_search_eligible(cfg: DashConfig) -> bool:
+    """Configs the Pallas fingerprint read path covers exactly: inline keys,
+    fingerprints on, and a probe window the 2-bucket kernel spans. Everything
+    else (ablation baselines, pointer mode) uses the per-key vmap path."""
+    from repro.kernels.probe import ROWS
+    return (cfg.use_fingerprints and not cfg.pointer_mode
+            and (cfg.use_balanced or cfg.probe_len <= 2)
+            and cfg.buckets_total <= ROWS)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2,))
+def _insert_batch_scan(cfg: DashConfig, mode: str, state: DashState,
+                       keys_hi, keys_lo, vals, words, valid):
+    """Sequential reference engine (lax.scan carry = the table). Kept as the
+    ``batching="scan"`` mode for differential testing; also serves pointer
+    mode, whose global key heap is not segment-local."""
     def step(st, xs):
         hi, lo, w, v, ok = xs
 
@@ -407,14 +435,151 @@ def insert_batch(cfg: DashConfig, mode: str, state: DashState,
     return state, statuses, jnp.any(acts)
 
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def search_batch(cfg: DashConfig, mode: str, state: DashState,
-                 keys_hi, keys_lo, words=None):
-    """Lock-free batched lookup — pure reads, zero writes (optimistic path)."""
+# mutable per-segment planes carried through the vmapped intra-segment scan
+_SEG_PLANES = ("fp", "ofp", "key_hi", "key_lo", "val", "meta", "ometa",
+               "version", "stash_active")
+
+
+def _segment_parallel(cfg: DashConfig, state: DashState, lanes, body):
+    """Run ``body`` over routed lanes: vmap over the segment axis, scan over
+    the intra-segment lanes — Dash's locking granularity as a compute
+    schedule. ``lanes`` is a pytree of (S, C, ...) planes; ``body`` operates
+    on a single-segment view of the table (seg index 0) and must only touch
+    ``_SEG_PLANES`` + ``n_items``. Returns (state, outs) where outs are the
+    stacked per-lane outputs, shape (S, C, ...)."""
+    planes = {k: getattr(state, k) for k in _SEG_PLANES}
+
+    def per_seg(pl, ln):
+        st = state._replace(n_items=jnp.asarray(0, I32),
+                            **{k: v[None] for k, v in pl.items()})
+        st, outs = jax.lax.scan(body, st, ln)
+        return {k: getattr(st, k)[0] for k in _SEG_PLANES}, outs, st.n_items
+
+    new_planes, outs, d_items = jax.vmap(per_seg)(planes, lanes)
+    state = state._replace(n_items=state.n_items + jnp.sum(d_items),
+                           **new_planes)
+    return state, outs
+
+
+def _scatter_statuses(statuses, src, n: int):
+    """(S, C) lane statuses -> (Q,) batch statuses; lanes that never got a
+    slot (capacity overflow) come back DROPPED so the host retry loop can
+    aggregate them with NEED_SPLIT subsets."""
+    flat = statuses.reshape(-1)
+    src = src.reshape(-1)
+    out = jnp.full((n,), -1, I32).at[jnp.clip(src, 0)].max(
+        jnp.where(src >= 0, flat, -1))
+    return jnp.where(out < 0, I32(DROPPED), out)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 8), donate_argnums=(2,))
+def _insert_batch_segments(cfg: DashConfig, mode: str, state: DashState,
+                           keys_hi, keys_lo, vals, words, valid,
+                           capacity: int):
+    from repro.kernels import ops
+    lanes, src, keep = ops.route_writes(
+        cfg, mode, state, (keys_hi, keys_lo, vals, words, valid), capacity)
+
+    def body(st, ln):
+        def do(s):
+            return _insert_core(cfg, s, 0, ln["b"], ln["h1"], ln["h2"],
+                                ln["hi"], ln["lo"], ln["words"], ln["val"])
+
+        def skip(s):
+            return s, I32(DROPPED), jnp.asarray(False)
+
+        st, status, act = jax.lax.cond(ln["valid"], do, skip, st)
+        return st, (status, act)
+
+    state, (statuses, acts) = _segment_parallel(cfg, state, lanes, body)
+    return (state, _scatter_statuses(statuses, src, keys_hi.shape[0]),
+            jnp.any(acts))
+
+
+def insert_batch(cfg: DashConfig, mode: str, state: DashState,
+                 keys_hi, keys_lo, vals, words=None, valid=None,
+                 batching: str = "segment", capacity: int | None = None):
+    """Sequentially-consistent batch insert. Returns (state, statuses,
+    any_stash_activation).
+
+    ``batching="segment"`` (default) routes by segment and runs all segments
+    in parallel; ``"scan"`` is the sequential reference. Both produce
+    bit-identical table state and statuses when ``capacity`` covers the
+    largest per-segment lane count (the host wrapper sizes it exactly;
+    the default ``capacity=None`` -> next pow2 >= batch covers any skew).
+    ``valid`` masks out padding lanes (host pads retry subsets to pow2 sizes
+    to avoid shape recompiles)."""
+    n = keys_hi.shape[0]
     if words is None:
-        words = _dummy_words(cfg, keys_hi.shape[0])
+        words = _dummy_words(cfg, n)
+    if valid is None:
+        valid = jnp.ones(n, jnp.bool_)
+    if batching == "scan" or cfg.pointer_mode:
+        return _insert_batch_scan(cfg, mode, state, keys_hi, keys_lo, vals,
+                                  words, valid)
+    if capacity is None:
+        capacity = _pow2_at_least(n)
+    return _insert_batch_segments(cfg, mode, state, keys_hi, keys_lo, vals,
+                                  words, valid, min(capacity, _pow2_at_least(n)))
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def _search_batch_vmap(cfg: DashConfig, mode: str, state: DashState,
+                       keys_hi, keys_lo, words):
     fn = lambda hi, lo, w: search_one(cfg, mode, state, hi, lo, w)
     return jax.vmap(fn)(keys_hi, keys_lo, words)
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 6))
+def _search_batch_routed(cfg: DashConfig, mode: str, state: DashState,
+                         keys_hi, keys_lo, words, capacity: int):
+    from repro.kernels import ops
+    # only reached on TPU (the dispatcher sends other hosts to probe_direct):
+    # run the real Pallas kernel, not its interpreter/jnp stand-ins
+    found, vals, keep = ops.probe_routed(cfg, state, keys_hi, keys_lo,
+                                         capacity, False, mode)
+    if capacity >= keys_hi.shape[0]:
+        return found, vals          # no lane can overflow: keep is all-True
+
+    # capacity-overflow lanes: per-key fallback, only traced into the branch
+    # actually taken (scalar predicate -> real cond, not a vmap select)
+    def fallback(_):
+        return _search_batch_vmap(cfg, mode, state, keys_hi, keys_lo, words)
+
+    def none(_):
+        return jnp.zeros_like(found), jnp.zeros_like(vals)
+
+    f2, v2 = jax.lax.cond(jnp.any(~keep), fallback, none, None)
+    return jnp.where(keep, found, f2), jnp.where(keep, vals, v2)
+
+
+def search_batch(cfg: DashConfig, mode: str, state: DashState,
+                 keys_hi, keys_lo, words=None, batching: str = "auto",
+                 capacity: int | None = None):
+    """Lock-free batched lookup — pure reads, zero writes (optimistic path).
+
+    Default read path is the Pallas fingerprint kernel over segment-routed
+    lanes (``batching="pallas"``); ``"vmap"`` is the per-key path, used
+    automatically for configs the kernel does not cover. On non-TPU hosts
+    the pallas mode runs the kernel's direct-addressed jnp lowering
+    (``kernels/ops.py:probe_direct``) — same fingerprint-first read
+    discipline, no per-segment lane planes (those are the TPU VMEM
+    blocking)."""
+    if words is None:
+        words = _dummy_words(cfg, keys_hi.shape[0])
+    if batching == "pallas" and not pallas_search_eligible(cfg):
+        batching = "vmap"      # fingerprint path would silently miss records
+    if batching == "auto":
+        batching = "pallas" if pallas_search_eligible(cfg) else "vmap"
+    if batching == "vmap":
+        return _search_batch_vmap(cfg, mode, state, keys_hi, keys_lo, words)
+    if jax.default_backend() != "tpu":
+        from repro.kernels import ops
+        return ops.probe_direct(cfg, state, keys_hi, keys_lo, mode)
+    if capacity is None:
+        capacity = _pow2_at_least(keys_hi.shape[0], floor=128)
+    return _search_batch_routed(cfg, mode, state, keys_hi, keys_lo, words,
+                                capacity)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2,))
@@ -444,50 +609,152 @@ def search_batch_pessimistic(cfg: DashConfig, mode: str, state: DashState,
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2,))
-def delete_batch(cfg: DashConfig, mode: str, state: DashState,
-                 keys_hi, keys_lo, words=None):
-    if words is None:
-        words = _dummy_words(cfg, keys_hi.shape[0])
-
+def _delete_batch_scan(cfg: DashConfig, mode: str, state: DashState,
+                       keys_hi, keys_lo, words, valid):
     def step(st, xs):
-        hi, lo, w = xs
-        st, status = delete_one(cfg, mode, st, hi, lo, w)
+        hi, lo, w, ok = xs
+
+        def do(s):
+            return delete_one(cfg, mode, s, hi, lo, w)
+
+        def skip(s):
+            return s, I32(DROPPED)
+
+        st, status = jax.lax.cond(ok, do, skip, st)
         return st, status
 
-    state, statuses = jax.lax.scan(step, state, (keys_hi, keys_lo, words))
+    state, statuses = jax.lax.scan(step, state,
+                                   (keys_hi, keys_lo, words, valid))
     return state, statuses
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 7), donate_argnums=(2,))
+def _delete_batch_segments(cfg: DashConfig, mode: str, state: DashState,
+                           keys_hi, keys_lo, words, valid, capacity: int):
+    from repro.kernels import ops
+    vals = jnp.zeros_like(keys_hi)     # deletes carry no payload
+    lanes, src, _ = ops.route_writes(
+        cfg, mode, state, (keys_hi, keys_lo, vals, words, valid), capacity)
+
+    def body(st, ln):
+        def do(s):
+            return delete_in_segment(cfg, s, 0, ln["b"], ln["h2"],
+                                     ln["hi"], ln["lo"], ln["words"])
+
+        def skip(s):
+            return s, I32(DROPPED)
+
+        st, status = jax.lax.cond(ln["valid"], do, skip, st)
+        return st, status
+
+    state, statuses = _segment_parallel(cfg, state, lanes, body)
+    return state, _scatter_statuses(statuses, src, keys_hi.shape[0])
+
+
+def delete_batch(cfg: DashConfig, mode: str, state: DashState,
+                 keys_hi, keys_lo, words=None, valid=None,
+                 batching: str = "segment", capacity: int | None = None):
+    n = keys_hi.shape[0]
+    if words is None:
+        words = _dummy_words(cfg, n)
+    if valid is None:
+        valid = jnp.ones(n, jnp.bool_)
+    if batching == "scan" or cfg.pointer_mode:
+        return _delete_batch_scan(cfg, mode, state, keys_hi, keys_lo, words,
+                                  valid)
+    if capacity is None:
+        capacity = _pow2_at_least(n)
+    return _delete_batch_segments(cfg, mode, state, keys_hi, keys_lo, words,
+                                  valid, min(capacity, _pow2_at_least(n)))
+
+
+def update_in_segment(cfg: DashConfig, state: DashState, seg, b, h2,
+                      q_hi, q_lo, q_words, v):
+    """Set the payload of an existing key within a known segment."""
+    fpv = hashing.fingerprint(h2)
+    window = 2 if cfg.use_balanced else max(cfg.probe_len, 1)
+    status = I32(NOT_FOUND)
+    for wo in range(window):
+        bw = _wrap(cfg, b + wo)
+        f, slot, _ = bk.bucket_probe(cfg, state, seg, bw, fpv, q_hi, q_lo, q_words)
+        do = f & (status == NOT_FOUND)
+        state = state._replace(
+            val=jnp.where(do, state.val.at[seg, bw, slot].set(v), state.val))
+        status = jnp.where(do, I32(INSERTED), status)
+    for s in range(cfg.num_stash):
+        sb = cfg.num_buckets + s
+        f, slot, _ = bk.bucket_probe(cfg, state, seg, sb, fpv, q_hi, q_lo, q_words)
+        do = f & (s < state.stash_active[seg]) & (status == NOT_FOUND)
+        state = state._replace(
+            val=jnp.where(do, state.val.at[seg, sb, slot].set(v), state.val))
+        status = jnp.where(do, I32(INSERTED), status)
+    return state, status
 
 
 @functools.partial(jax.jit, static_argnums=(0, 1), donate_argnums=(2,))
-def update_batch(cfg: DashConfig, mode: str, state: DashState,
-                 keys_hi, keys_lo, vals, words=None):
-    """Set payload for existing keys (serving cache refresh path)."""
-    if words is None:
-        words = _dummy_words(cfg, keys_hi.shape[0])
-
+def _update_batch_scan(cfg: DashConfig, mode: str, state: DashState,
+                       keys_hi, keys_lo, vals, words, valid):
     def step(st, xs):
-        hi, lo, w, v = xs
-        q_hi, q_lo, h1, h2 = _query_parts(cfg, hi, lo, w)
-        seg, b = locate(cfg, mode, st, h1)
-        fpv = hashing.fingerprint(h2)
-        window = 2 if cfg.use_balanced else max(cfg.probe_len, 1)
-        status = I32(NOT_FOUND)
-        for wo in range(window):
-            bw = _wrap(cfg, b + wo)
-            f, slot, _ = bk.bucket_probe(cfg, st, seg, bw, fpv, q_hi, q_lo, w)
-            do = f & (status == NOT_FOUND)
-            st = st._replace(val=jnp.where(do, st.val.at[seg, bw, slot].set(v), st.val))
-            status = jnp.where(do, I32(INSERTED), status)
-        for s in range(cfg.num_stash):
-            sb = cfg.num_buckets + s
-            f, slot, _ = bk.bucket_probe(cfg, st, seg, sb, fpv, q_hi, q_lo, w)
-            do = f & (s < st.stash_active[seg]) & (status == NOT_FOUND)
-            st = st._replace(val=jnp.where(do, st.val.at[seg, sb, slot].set(v), st.val))
-            status = jnp.where(do, I32(INSERTED), status)
+        hi, lo, w, v, ok = xs
+
+        def do(s):
+            q_hi, q_lo, h1, h2 = _query_parts(cfg, hi, lo, w)
+            seg, b = locate(cfg, mode, s, h1)
+            return update_in_segment(cfg, s, seg, b, h2, q_hi, q_lo, w, v)
+
+        def skip(s):
+            return s, I32(DROPPED)
+
+        st, status = jax.lax.cond(ok, do, skip, st)
         return st, status
 
-    state, statuses = jax.lax.scan(step, state, (keys_hi, keys_lo, words, vals))
+    state, statuses = jax.lax.scan(
+        step, state, (keys_hi, keys_lo, words, vals, valid))
     return state, statuses
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 8), donate_argnums=(2,))
+def _update_batch_segments(cfg: DashConfig, mode: str, state: DashState,
+                           keys_hi, keys_lo, vals, words, valid,
+                           capacity: int):
+    from repro.kernels import ops
+    lanes, src, _ = ops.route_writes(
+        cfg, mode, state, (keys_hi, keys_lo, vals, words, valid), capacity)
+
+    def body(st, ln):
+        def do(s):
+            return update_in_segment(cfg, s, 0, ln["b"], ln["h2"],
+                                     ln["hi"], ln["lo"], ln["words"],
+                                     ln["val"])
+
+        def skip(s):
+            return s, I32(DROPPED)
+
+        st, status = jax.lax.cond(ln["valid"], do, skip, st)
+        return st, status
+
+    state, statuses = _segment_parallel(cfg, state, lanes, body)
+    return state, _scatter_statuses(statuses, src, keys_hi.shape[0])
+
+
+def update_batch(cfg: DashConfig, mode: str, state: DashState,
+                 keys_hi, keys_lo, vals, words=None, valid=None,
+                 batching: str = "segment", capacity: int | None = None):
+    """Set payload for existing keys (serving cache refresh path). ``valid``
+    masks padding lanes exactly like ``insert_batch``, so host-side retry
+    subsets can pad to pow2 sizes without recompiling on shape changes."""
+    n = keys_hi.shape[0]
+    if words is None:
+        words = _dummy_words(cfg, n)
+    if valid is None:
+        valid = jnp.ones(n, jnp.bool_)
+    if batching == "scan" or cfg.pointer_mode:
+        return _update_batch_scan(cfg, mode, state, keys_hi, keys_lo, vals,
+                                  words, valid)
+    if capacity is None:
+        capacity = _pow2_at_least(n)
+    return _update_batch_segments(cfg, mode, state, keys_hi, keys_lo, vals,
+                                  words, valid, min(capacity, _pow2_at_least(n)))
 
 
 # ---------------------------------------------------------------------------

@@ -56,13 +56,14 @@ class DashTable:
             return self._key_words(words)
         return self._split_keys(keys)
 
-    # -- lazy recovery hook (Sec. 4.8) ----------------------------------------
+    # -- host-visible routing (lazy recovery + batch planning) ----------------
 
-    def _touched_segments(self, hi, lo) -> np.ndarray:
+    def _segments_of(self, hi, lo) -> np.ndarray:
+        """Physical segment of every key (host mirror of engine.locate)."""
         h1 = hashing.np_hash1(np.asarray(hi), np.asarray(lo))
         if self.mode == "eh":
             dirv = np.asarray(self.state.dir)
-            return np.unique(dirv[h1 >> np.uint32(32 - self.cfg.dir_depth_max)])
+            return dirv[h1 >> np.uint32(32 - self.cfg.dir_depth_max)]
         word = int(np.asarray(self.state.lh_word))
         level, nxt = word >> 24, word & 0xFFFFFF
         mask_lo = (1 << (self.cfg.lh_base_log2 + level)) - 1
@@ -70,14 +71,60 @@ class DashTable:
         mask_hi = (mask_lo << 1) | 1
         seg2 = (h1 & np.uint32(mask_hi)).astype(np.int64)
         logical = np.where(seg < nxt, seg2, seg)
-        return np.unique(np.asarray(self.state.lh_dir)[logical])
+        return np.asarray(self.state.lh_dir)[logical]
 
-    def _ensure_recovered(self, hi, lo):
+    def _touched_segments(self, hi, lo) -> np.ndarray:
+        return np.unique(self._segments_of(hi, lo))
+
+    _pow2 = staticmethod(engine._pow2_at_least)
+
+    @staticmethod
+    def _lane_quantum(n: int, floor: int = 8) -> int:
+        """Round lane capacity up to a pow2 or 1.5*pow2 level: capacity is
+        the intra-segment critical path, so pure pow2 rounding wastes up to
+        2x sequential steps; the extra half-steps keep jit recompiles to
+        ~2 levels per octave."""
+        n = max(int(n), 1)
+        p = max(floor, 1 << (n - 1).bit_length())
+        mid = p // 2 + p // 4          # the 1.5*pow2 level below p
+        return mid if n <= mid and mid >= floor else p
+
+    @staticmethod
+    def _max_per_segment(seg: np.ndarray) -> int:
+        live = seg[seg >= 0]
+        return int(np.bincount(live).max()) if live.size else 1
+
+    def _write_plan(self, seg: np.ndarray, n_total: int):
+        """(batching, capacity) for a mutating batch, from the per-key
+        segment ids (computed once per op, shared with lazy recovery).
+
+        The host sees the directory, so it can size the per-segment lane
+        capacity exactly (max keys routed to one segment — padding lanes sit
+        after real keys in batch order, so they can only overflow, never
+        displace). Segment-parallel wins when the critical path (capacity)
+        is meaningfully shorter than the batch; a freshly-created table with
+        2 segments has no parallelism to exploit, so it stays on the scan
+        engine until splits spread the directory."""
+        capacity = self._lane_quantum(self._max_per_segment(seg))
+        if capacity * 4 <= self._pow2(n_total):
+            return "segment", capacity
+        return "scan", None
+
+    def _search_plan(self, seg: np.ndarray):
+        """(batching, capacity) for a read batch: Pallas fingerprint path for
+        large batches on eligible configs, per-key vmap otherwise (kernel
+        launch overhead dominates tiny batches)."""
+        if seg.size >= 256 and engine.pallas_search_eligible(self.cfg):
+            return "pallas", self._pow2(self._max_per_segment(seg), floor=128)
+        return "vmap", None
+
+    def _ensure_recovered(self, touched: np.ndarray):
+        """Lazy per-segment recovery over precomputed touched segment ids."""
         if not self.lazy_recovery:
             return
         gver = int(np.asarray(self.state.gver))
         seg_ver = np.asarray(self.state.seg_version)
-        for seg in self._touched_segments(hi, lo):
+        for seg in np.unique(touched):
             if seg >= 0 and int(seg_ver[seg]) != gver:
                 self.state = recovery.recover_segment_host(
                     self.cfg, self.mode, self.state, int(seg))
@@ -90,55 +137,69 @@ class DashTable:
         hi, lo = np.asarray(hi_j), np.asarray(lo_j)
         w = None if w_j is None else np.asarray(w_j)
         vals = np.asarray(values, dtype=np.uint32)
-        self._ensure_recovered(hi, lo)
         out = np.full(hi.shape[0], NEED_SPLIT, dtype=np.int32)
         pending = np.arange(hi.shape[0])
         first = True
         for _ in range(max_retries):
+            # per-key segments: recomputed each round (splits remap keys),
+            # shared by recovery, the batch plan, and the failure hints
+            seg = self._segments_of(hi[pending], lo[pending])
             if first:
+                self._ensure_recovered(seg)
                 idx, valid = pending, None           # full batch, no padding
             else:
                 # pad retry subsets to pow2 so jit shapes are reused
-                n = max(8, 1 << int(np.ceil(np.log2(max(pending.size, 1)))))
+                n = self._pow2(pending.size)
                 idx = np.concatenate([pending, np.zeros(n - pending.size, np.int64)])
                 valid = jnp.asarray(np.arange(n) < pending.size)
+            batching, capacity = self._write_plan(seg, idx.size)
             self.state, statuses, activated = engine.insert_batch(
                 self.cfg, self.mode, self.state,
                 jnp.asarray(hi[idx]), jnp.asarray(lo[idx]),
                 jnp.asarray(vals[idx]),
-                None if w is None else jnp.asarray(w[idx]), valid)
+                None if w is None else jnp.asarray(w[idx]), valid,
+                batching=batching, capacity=capacity)
             statuses = np.asarray(statuses)[:pending.size]
             out[pending] = statuses
-            failed = pending[statuses == NEED_SPLIT]
+            failed = statuses == NEED_SPLIT
             if bool(activated):
                 self._on_pressure(None)   # LH: stash-allocation split trigger
-            if failed.size == 0:
+            if not failed.any():
                 return out
-            seg_hint = self._touched_segments(hi[failed], lo[failed])
-            self._on_pressure(seg_hint)
-            pending = failed
+            self._on_pressure(np.unique(seg[failed]))
+            pending = pending[failed]
             first = False
         raise TableFullError("insert retry budget exhausted")
 
     def search(self, keys=None, words=None):
         hi, lo, w = self._prep(keys, words)
-        self._ensure_recovered(hi, lo)
-        found, vals = engine.search_batch(self.cfg, self.mode, self.state, hi, lo, w)
+        seg = self._segments_of(hi, lo)
+        self._ensure_recovered(seg)
+        batching, capacity = self._search_plan(seg)
+        found, vals = engine.search_batch(self.cfg, self.mode, self.state,
+                                          hi, lo, w, batching=batching,
+                                          capacity=capacity)
         return np.asarray(found), np.asarray(vals)
 
     def delete(self, keys=None, words=None):
         hi, lo, w = self._prep(keys, words)
-        self._ensure_recovered(hi, lo)
+        seg = self._segments_of(hi, lo)
+        self._ensure_recovered(seg)
+        batching, capacity = self._write_plan(seg, seg.size)
         self.state, statuses = engine.delete_batch(
-            self.cfg, self.mode, self.state, hi, lo, w)
+            self.cfg, self.mode, self.state, hi, lo, w,
+            batching=batching, capacity=capacity)
         return np.asarray(statuses)
 
     def update(self, keys=None, values=None, words=None):
         hi, lo, w = self._prep(keys, words)
-        self._ensure_recovered(hi, lo)
+        seg = self._segments_of(hi, lo)
+        self._ensure_recovered(seg)
         vals = jnp.asarray(np.asarray(values, dtype=np.uint32))
+        batching, capacity = self._write_plan(seg, seg.size)
         self.state, statuses = engine.update_batch(
-            self.cfg, self.mode, self.state, hi, lo, vals, w)
+            self.cfg, self.mode, self.state, hi, lo, vals, w,
+            batching=batching, capacity=capacity)
         return np.asarray(statuses)
 
     # -- lifecycle / stats ----------------------------------------------------

@@ -29,6 +29,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.core import DashConfig, engine, hashing, layout
 from repro.core.layout import DashState
+from repro.kernels import ops as kops
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -55,23 +56,14 @@ def owner_of(keys_hi, keys_lo, n_shards: int):
 
 
 def _local_dispatch(hi, lo, v, n_shards: int, capacity: int):
-    """Route this device's queries into (n_shards, capacity) buffers.
-    Returns buffers + src map (-1 = empty lane) + kept mask."""
+    """Route this device's queries into (n_shards, capacity) buffers via the
+    shared MoE-style dispatcher (kernels/ops.py) — the same sort-based
+    router the engine uses to group by segment, here grouping by owner
+    shard. Returns buffers + src map (-1 = empty lane) + kept mask."""
     owner = owner_of(hi, lo, n_shards)
-    onehot = jax.nn.one_hot(owner, n_shards, dtype=I32)
-    pos = jnp.cumsum(onehot, axis=0) - 1
-    slot = jnp.sum(pos * onehot, axis=1)
-    keep = slot < capacity
-    dst = jnp.where(keep, owner * capacity + slot, n_shards * capacity)
-    size = n_shards * capacity + 1
-    b_hi = jnp.zeros((size,), U32).at[dst].set(hi)
-    b_lo = jnp.zeros((size,), U32).at[dst].set(lo)
-    b_v = jnp.zeros((size,), U32).at[dst].set(v)
-    b_src = jnp.full((size,), -1, I32).at[dst].set(
-        jnp.where(keep, jnp.arange(hi.shape[0]), -1))
-    sh = (n_shards, capacity)
-    return (b_hi[:-1].reshape(sh), b_lo[:-1].reshape(sh),
-            b_v[:-1].reshape(sh), b_src[:-1].reshape(sh), keep)
+    (b_hi, b_lo, b_v), b_src, keep = kops.route_lanes(
+        owner, (hi, lo, v), n_shards, capacity, (0, 0, 0))
+    return b_hi, b_lo, b_v, b_src, keep
 
 
 def auto_capacity(q_local: int, n_shards: int, slack: float = 4.0) -> int:
@@ -83,12 +75,19 @@ def auto_capacity(q_local: int, n_shards: int, slack: float = 4.0) -> int:
 
 
 def build_dht_ops(cfg: DashConfig, mesh: Mesh, axes=("data",),
-                  capacity: int | None = None, q_local_hint: int = 1024):
+                  capacity: int | None = None, q_local_hint: int = 1024,
+                  search_batching: str = "vmap"):
     """jitted (search_fn, insert_fn) over a device-sharded table.
 
     Inputs: keys reshaped (n_shards, q_local), sharded on dim 0.
     Payloads are PACKED into one (n_shards, cap, W) word tensor so each
-    direction is a single all_to_all (one launch on the ICI, not four)."""
+    direction is a single all_to_all (one launch on the ICI, not four).
+
+    ``search_batching`` selects the shard-local read path; shards are
+    ordinary Dash tables, so the Pallas fingerprint path applies verbatim
+    (pass "pallas"/"auto" on TPU). The CPU default stays on the per-key
+    path: interpret-mode MXU gathers lose on emulated devices, and the
+    all_to_all padding lanes (key 0) would pile onto one segment."""
     axes = tuple(axes)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     if capacity is None:
@@ -105,7 +104,8 @@ def build_dht_ops(cfg: DashConfig, mesh: Mesh, axes=("data",),
         local = jax.tree.map(lambda x: x[0], st)
         found, vals = engine.search_batch(cfg, "eh", local,
                                           req[..., 0].reshape(-1),
-                                          req[..., 1].reshape(-1))
+                                          req[..., 1].reshape(-1),
+                                          batching=search_batching)
         resp = a2a(jnp.stack([found.astype(U32), vals], axis=-1)
                    .reshape(n_shards, capacity, 2))       # one payload back
         out_f = jnp.zeros(hi.shape[0], jnp.bool_)
@@ -123,9 +123,15 @@ def build_dht_ops(cfg: DashConfig, mesh: Mesh, axes=("data",),
         valid_lane = (b_src >= 0).astype(U32)
         req = a2a(jnp.stack([b_hi, b_lo, b_v, valid_lane], axis=-1))
         local = jax.tree.map(lambda x: x[0], st)
+        # shard-level parallelism is already this function's dispatch axis;
+        # the shard-local sub-batch is small and mostly padding lanes, so the
+        # sequential engine is the right inner mode (the segment-parallel
+        # engine pays off for large host batches where the host sizes lane
+        # capacity from the directory — see DashTable._write_plan)
         local, statuses, _ = engine.insert_batch(
             cfg, "eh", local, req[..., 0].reshape(-1), req[..., 1].reshape(-1),
-            req[..., 2].reshape(-1), None, req[..., 3].reshape(-1) > 0)
+            req[..., 2].reshape(-1), None, req[..., 3].reshape(-1) > 0,
+            batching="scan")
         s_back = a2a(statuses.reshape(n_shards, capacity))
         out = jnp.full(hi.shape[0], -1, I32)
         src = b_src.reshape(-1)
@@ -149,12 +155,13 @@ class DistributedDash:
     """Host wrapper: device-sharded Dash with shard-local SMO handling."""
 
     def __init__(self, cfg: DashConfig, mesh: Mesh, axes=("data",),
-                 capacity: int | None = None, q_local_hint: int = 1024):
+                 capacity: int | None = None, q_local_hint: int = 1024,
+                 search_batching: str = "vmap"):
         self.cfg = cfg
         self.mesh = mesh
         self.axes = tuple(axes)
         self.search_fn, self.insert_fn, self.n_shards = build_dht_ops(
-            cfg, mesh, self.axes, capacity, q_local_hint)
+            cfg, mesh, self.axes, capacity, q_local_hint, search_batching)
         sh = NamedSharding(mesh, P(self.axes))
         self.state = jax.device_put(make_sharded_state(cfg, self.n_shards),
                                     sh)

@@ -2,14 +2,24 @@
 
 ``plane_views`` reshapes the table's fingerprint/metadata planes into the
 hardware-aligned tiles the probe kernel wants (cheap, fusible pads).
-``probe_routed`` is the end-to-end fast path used by the distributed hash
-table: queries already routed per segment -> Pallas fingerprint scan ->
-key verification only on fingerprint hits (gathers bounded by the match
-bitmap, the paper's 'amortized one key load').
+``probe_routed`` is the end-to-end fast path: queries routed per segment ->
+Pallas fingerprint scan -> key verification only on fingerprint hits
+(gathers bounded by the match bitmap, the paper's 'amortized one key load').
+It backs the default ``engine.search_batch`` read path on TPU;
+``probe_direct`` is its direct-addressed jnp lowering for non-TPU hosts
+(same fingerprint-first discipline, no per-segment lane blocking).
 
-On this CPU container the kernels run in interpret mode (`interpret=True`
-default); on TPU pass interpret=False — shapes/BlockSpecs are already
-MXU/VPU aligned.
+Routing is the shared MoE-style dispatcher of the whole repo: the same
+``group_ranks``/``route_lanes`` pair groups queries by *segment* here, by
+*owner shard* in distributed/dht.py, and carries full key/value lanes for
+the segment-parallel write engine (core/engine.py) via ``route_writes``.
+Ranking is sort-based (O(Q log Q)), not the dense one-hot+cumsum (O(Q*S))
+it replaced, so routing cost scales with batch size, not directory size.
+
+``interpret=True`` (the default off-TPU) swaps pl.pallas_call for the
+bit-identical jnp lowerings — the Pallas interpreter's per-program overhead
+is not the hot path's job; on TPU pass interpret=False, shapes/BlockSpecs
+are already MXU/VPU aligned.
 """
 from __future__ import annotations
 
@@ -24,6 +34,8 @@ from . import probe as probe_kernel
 from .hashmix import BLOCK, bulk_hash
 from .probe import LANES, NSLOTS, ROWS, fingerprint_probe
 
+I32 = jnp.int32
+
 
 @functools.partial(jax.jit, static_argnums=(0,))
 def plane_views(cfg: DashConfig, state: DashState):
@@ -36,106 +48,255 @@ def plane_views(cfg: DashConfig, state: DashState):
     return fp, alloc
 
 
-@functools.partial(jax.jit, static_argnums=(0, 4))
-def route_queries(cfg: DashConfig, state: DashState, keys_hi, keys_lo,
-                  capacity: int):
-    """Group a query batch by segment with fixed capacity (MoE-style dispatch;
-    the intra-host analog of the DHT's all_to_all routing).
+# ---------------------------------------------------------------------------
+# shared MoE-style dispatcher (segments here, owner shards in the DHT)
+# ---------------------------------------------------------------------------
 
-    Returns (q_fp, q_b, q_pb, q_src): (S, C) planes; q_src maps back to the
-    original batch position (-1 = empty lane)."""
-    S = cfg.max_segments
-    h1 = hashing.hash1(keys_hi, keys_lo)
-    h2 = hashing.hash2(keys_hi, keys_lo)
-    seg = state.dir[layout.dir_index(cfg, h1)]
-    b = layout.bucket_index(cfg, h1)
-    pb = (b + 1) & (cfg.num_buckets - 1)
-    fp = (h2 & jnp.uint32(0xFF)).astype(jnp.int32)
+def group_ranks(group_ids):
+    """Rank of each item within its group, preserving input order.
 
-    # position of each query within its segment's lane block
-    onehot = jax.nn.one_hot(seg, S, dtype=jnp.int32)            # (Q, S)
-    pos = jnp.cumsum(onehot, axis=0) - 1                         # running count
-    slot = jnp.sum(pos * onehot, axis=1)                         # (Q,)
-    keep = slot < capacity
+    Sort-based (stable argsort + run-start cummax): O(Q log Q) regardless of
+    the number of groups. The stable sort is what makes the segment-parallel
+    write engine sequentially consistent: lanes of one segment keep batch
+    order.
+    """
+    n = group_ids.shape[0]
+    order = jnp.argsort(group_ids)                    # stable in jnp
+    sorted_ids = group_ids[order]
+    idx = jnp.arange(n, dtype=I32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), jnp.bool_), sorted_ids[1:] != sorted_ids[:-1]])
+    run_start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    return jnp.zeros((n,), I32).at[order].set(idx - run_start)
 
-    q_fp = jnp.zeros((S, capacity), jnp.int32)
-    q_b = jnp.full((S, capacity), -1, jnp.int32)
-    q_pb = jnp.full((S, capacity), -1, jnp.int32)
-    q_src = jnp.full((S, capacity), -1, jnp.int32)
-    idx = (jnp.where(keep, seg, 0), jnp.where(keep, slot, 0))
-    q_fp = q_fp.at[idx].set(jnp.where(keep, fp, 0))
-    q_b = q_b.at[idx].set(jnp.where(keep, b, -1))
-    q_pb = q_pb.at[idx].set(jnp.where(keep, pb, -1))
-    q_src = q_src.at[idx].set(jnp.where(keep, jnp.arange(keys_hi.shape[0]), -1))
-    return q_fp, q_b, q_pb, q_src, keep
+
+def route_lanes(group_ids, payloads, num_groups: int, capacity: int, fills):
+    """Scatter per-item payload arrays into (num_groups, capacity) lane planes.
+
+    Items past ``capacity`` in their group go to a trash slot *past the end*
+    of the flat buffer — they can never clobber a live lane (the old dense
+    router scattered them onto lane (0, 0)). Returns (planes, src, keep):
+    ``src`` maps lanes back to batch positions (-1 = empty), ``keep[i]``
+    is True iff item i received a lane.
+    """
+    n = group_ids.shape[0]
+    group_ids = group_ids.astype(I32)
+    rank = group_ranks(group_ids)
+    keep = (rank < capacity) & (group_ids >= 0) & (group_ids < num_groups)
+    trash = num_groups * capacity
+    dst = jnp.where(keep, group_ids * capacity + rank, trash)
+    outs = []
+    for p, fill in zip(payloads, fills):
+        flat = jnp.full((trash + 1,) + p.shape[1:], fill, p.dtype).at[dst].set(p)
+        outs.append(flat[:-1].reshape((num_groups, capacity) + p.shape[1:]))
+    src = jnp.full((trash + 1,), -1, I32).at[dst].set(jnp.arange(n, dtype=I32))
+    return outs, src[:-1].reshape(num_groups, capacity), keep
+
+
+def locate_batch(cfg: DashConfig, mode: str, state: DashState, h1):
+    """Vectorized (seg, bucket) addressing for a batch of h1 hashes —
+    engine.locate is pure jnp indexing, so it batches as-is; one copy of
+    the EH/LH addressing rules."""
+    from repro.core import engine    # local: core imports kernels lazily too
+    return engine.locate(cfg, mode, state, h1)
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4, 5))
+def route_queries(cfg: DashConfig, state: DashState, keys_hi, keys_lo,
+                  capacity: int, mode: str = "eh"):
+    """Group a query batch by segment with fixed capacity (MoE-style dispatch;
+    the intra-host analog of the DHT's all_to_all routing).
+
+    Returns (q_fp, q_b, q_pb, q_src, keep): (S, C) planes; q_src maps back to
+    the original batch position (-1 = empty lane); ``keep`` is False for
+    capacity-dropped queries (resolved by the caller on the per-key path)."""
+    h1 = hashing.hash1(keys_hi, keys_lo)
+    h2 = hashing.hash2(keys_hi, keys_lo)
+    seg, b = locate_batch(cfg, mode, state, h1)
+    pb = (b + 1) & (cfg.num_buckets - 1)
+    fp = (h2 & jnp.uint32(0xFF)).astype(jnp.int32)
+    (q_fp, q_b, q_pb), q_src, keep = route_lanes(
+        seg, (fp, b, pb), cfg.max_segments, capacity, (0, -1, -1))
+    return q_fp, q_b, q_pb, q_src, keep
+
+
+@functools.partial(jax.jit, static_argnums=(0, 4, 5, 6))
 def probe_routed(cfg: DashConfig, state: DashState, keys_hi, keys_lo,
-                 capacity: int = 256, interpret: bool = True):
+                 capacity: int = 256, interpret: bool = True,
+                 mode: str = "eh"):
     """End-to-end batched search through the Pallas fingerprint kernel.
 
-    Covers target+probing buckets and (rare) stash fallback via the engine's
-    overflow metadata only when the bitmaps miss. Returns (found, values)
-    aligned with the input batch. Queries overflowing the routing capacity
-    are resolved by the caller via the plain engine path (`keep` lanes)."""
-    from repro.core import engine  # local: avoid import cycle
+    Covers target+probing buckets via the MXU gather and the (few) stash
+    buckets via a dense VPU compare against the same routed lanes — stash
+    rows are per-segment constants, so no gather is needed and the overflow
+    metadata walk of the scalar path is unnecessary. Returns (found, values,
+    keep) aligned with the input batch; ``keep=False`` lanes overflowed the
+    routing capacity and are untouched (found=False) — the caller resolves
+    them on the per-key path.
 
+    Requires inline keys + fingerprints + a <=2 bucket probe window (the
+    engine dispatcher gates on exactly that, falling back to the vmap path).
+
+    ``interpret=True`` (non-TPU hosts) runs the kernel's bit-identical jnp
+    lowering instead of the Pallas interpreter — same routed planes, same
+    bitmaps, none of the per-program interpreter overhead.
+    """
     Q = keys_hi.shape[0]
+    S, NB, SL = cfg.max_segments, cfg.num_buckets, cfg.num_slots
     fp_pad, alloc = plane_views(cfg, state)
     q_fp, q_b, q_pb, q_src, keep = route_queries(cfg, state, keys_hi, keys_lo,
-                                                 capacity)
-    bits_b, bits_pb = fingerprint_probe(fp_pad, alloc, q_fp, q_b, q_pb,
-                                        interpret=interpret)
+                                                 capacity, mode)
+    if interpret:
+        bits_b, bits_pb, _free_b, _free_pb = probe_kernel.fingerprint_probe_jnp(
+            fp_pad, alloc, q_fp, q_b, q_pb)
+    else:
+        bits_b, bits_pb, _free_b, _free_pb = fingerprint_probe(
+            fp_pad, alloc, q_fp, q_b, q_pb, interpret=False)
 
-    # verify fingerprint hits with real key compares (gather only on match)
-    seg_ids = jnp.broadcast_to(jnp.arange(cfg.max_segments)[:, None], q_b.shape)
-
-    def verify(seg, bqs, bits, hi, lo):
-        ok = jnp.zeros((), jnp.bool_)
-        val = jnp.zeros((), jnp.uint32)
-        safe_b = jnp.clip(bqs, 0, cfg.buckets_total - 1)
-        for j in range(NSLOTS):
-            hit = ((bits >> j) & 1) == 1
-            k_hi = state.key_hi[seg, safe_b, j]
-            k_lo = state.key_lo[seg, safe_b, j]
-            m = hit & (k_hi == hi) & (k_lo == lo)
-            val = jnp.where(m & ~ok, state.val[seg, safe_b, j], val)
-            ok = ok | m
-        return ok, val
-
+    # verify fingerprint hits with real key compares — one row gather per
+    # plane (the paper's 'amortized one key load': only matched rows hit)
+    seg_ids = jnp.broadcast_to(jnp.arange(S)[:, None], q_b.shape).reshape(-1)
     flat_src = q_src.reshape(-1)
     hi_r = jnp.where(flat_src >= 0, keys_hi[jnp.clip(flat_src, 0)], 0)
     lo_r = jnp.where(flat_src >= 0, keys_lo[jnp.clip(flat_src, 0)], 0)
-    vfn = jax.vmap(verify)
-    ok_b, val_b = vfn(seg_ids.reshape(-1), q_b.reshape(-1), bits_b.reshape(-1), hi_r, lo_r)
-    ok_p, val_p = vfn(seg_ids.reshape(-1), q_pb.reshape(-1), bits_pb.reshape(-1), hi_r, lo_r)
+    slot_ids = jnp.arange(cfg.num_slots)
+
+    def verify(bqs, bits):
+        safe_b = jnp.clip(bqs.reshape(-1), 0, cfg.buckets_total - 1)
+        cand = ((bits.reshape(-1)[:, None] >> slot_ids) & 1) == 1  # (N, SL)
+        k_hi = state.key_hi[seg_ids, safe_b]                       # (N, SL)
+        k_lo = state.key_lo[seg_ids, safe_b]
+        m = cand & (k_hi == hi_r[:, None]) & (k_lo == lo_r[:, None])
+        vals_row = state.val[seg_ids, safe_b]
+        val = jnp.max(jnp.where(m, vals_row, jnp.uint32(0)), axis=-1)
+        return jnp.any(m, axis=-1), val
+
+    ok_b, val_b = verify(q_b, bits_b)
+    ok_p, val_p = verify(q_pb, bits_pb)
     ok = ok_b | ok_p
     val = jnp.where(ok_b, val_b, val_p)
+
+    # --- stash lanes: dense compare, no gather (stash rows are per-segment
+    # constants). Alloc-bitmap gating subsumes the stash_active check: a
+    # never-activated stash bucket has no allocated slots.
+    if cfg.num_stash > 0:
+        C = q_fp.shape[1]
+        st_alloc = layout.meta_alloc(state.meta[:, NB:NB + cfg.num_stash])
+        slot_ids = jnp.arange(SL, dtype=jnp.uint32)
+        st_live = ((st_alloc[..., None] >> slot_ids) & 1) == 1   # (S, ns, SL)
+        st_hi = state.key_hi[:, NB:NB + cfg.num_stash, :SL]
+        st_lo = state.key_lo[:, NB:NB + cfg.num_stash, :SL]
+        st_val = state.val[:, NB:NB + cfg.num_stash, :SL]
+        hi_l = hi_r.reshape(S, C)[:, :, None, None]
+        lo_l = lo_r.reshape(S, C)[:, :, None, None]
+        m = (st_live[:, None] & (st_hi[:, None] == hi_l) &
+             (st_lo[:, None] == lo_l) & (q_src >= 0)[..., None, None])
+        if cfg.use_fingerprints:
+            st_fp = state.fp[:, NB:NB + cfg.num_stash, :SL].astype(jnp.int32)
+            m = m & (st_fp[:, None] == q_fp[:, :, None, None])
+        ok_s = jnp.any(m, axis=(2, 3)).reshape(-1)               # (S*C,)
+        val_s = jnp.max(jnp.where(m, jnp.broadcast_to(st_val[:, None], m.shape),
+                                  jnp.uint32(0)), axis=(2, 3)).reshape(-1)
+        val = jnp.where(ok, val, val_s)
+        ok = ok | ok_s
 
     found = jnp.zeros((Q,), jnp.bool_)
     values = jnp.zeros((Q,), jnp.uint32)
     src_safe = jnp.clip(flat_src, 0)
     found = found.at[src_safe].max(ok & (flat_src >= 0))
     values = values.at[src_safe].max(jnp.where(ok & (flat_src >= 0), val, 0))
+    return found, values, keep
 
-    # stash fallback for misses (uses overflow metadata; rare by design)
-    def stash_lookup(hi, lo, miss):
-        def go(_):
-            q_hi, q_lo, h1, h2 = engine._query_parts(cfg, hi, lo,
-                                                     jnp.zeros((cfg.key_heap_words,), jnp.uint32))
-            seg, b = engine.locate(cfg, "eh", state, h1)
-            f, v = engine.probe_in_segment(cfg, state, seg, b, h2, q_hi, q_lo,
-                                           jnp.zeros((cfg.key_heap_words,), jnp.uint32))
-            return f, v
 
-        return jax.lax.cond(miss, go, lambda _: (jnp.asarray(False), jnp.uint32(0)), None)
+@functools.partial(jax.jit, static_argnums=(0, 4))
+def probe_direct(cfg: DashConfig, state: DashState, keys_hi, keys_lo,
+                 mode: str = "eh"):
+    """Direct-addressed jnp lowering of the fingerprint read path (CPU hosts).
+
+    Same read discipline as ``probe_routed`` — fingerprint match first, key
+    loads only on candidates, stash covered by a dense compare — but
+    per-query gathers instead of (S, C) lane planes: the fixed-capacity
+    routing exists for the Pallas kernel's per-segment VMEM blocking, which
+    buys nothing on XLA:CPU and pays ~S*C/Q lane overcapacity. Returns
+    (found, values); never drops lanes (no routing capacity).
+    """
+    SL, NB = cfg.num_slots, cfg.num_buckets
+    h1 = hashing.hash1(keys_hi, keys_lo)
+    h2 = hashing.hash2(keys_hi, keys_lo)
+    fpv = (h2 & jnp.uint32(0xFF)).astype(jnp.uint8)
+    seg, b = locate_batch(cfg, mode, state, h1)
+    slot_bit = jnp.uint32(1) << jnp.arange(SL, dtype=jnp.uint32)
+
+    def bucket_hits(bx):
+        alloc = layout.meta_alloc(state.meta[seg, bx])            # (Q,)
+        live = (alloc[:, None] & slot_bit) != 0                   # (Q, SL)
+        cand = live & (state.fp[seg, bx, :SL] == fpv[:, None])
+        m = (cand & (state.key_hi[seg, bx] == keys_hi[:, None]) &
+             (state.key_lo[seg, bx] == keys_lo[:, None]))
+        val = jnp.max(jnp.where(m, state.val[seg, bx], jnp.uint32(0)), axis=-1)
+        return jnp.any(m, axis=-1), val
+
+    ok_b, val_b = bucket_hits(b)
+    ok_p, val_p = bucket_hits((b + 1) & (NB - 1))
+    found = ok_b | ok_p
+    values = jnp.where(ok_b, val_b, val_p)
 
     if cfg.num_stash > 0:
-        sf, sv = jax.vmap(stash_lookup)(keys_hi, keys_lo, ~found & keep)
-        values = jnp.where(sf & ~found, sv, values)
-        found = found | sf
-    return found, values, keep
+        st_alloc = layout.meta_alloc(state.meta[:, NB:NB + cfg.num_stash])[seg]
+        live = (st_alloc[..., None] & slot_bit) != 0              # (Q, ns, SL)
+        cand = live & (state.fp[:, NB:NB + cfg.num_stash, :SL][seg]
+                       == fpv[:, None, None])
+        m = (cand &
+             (state.key_hi[:, NB:NB + cfg.num_stash][seg] == keys_hi[:, None, None]) &
+             (state.key_lo[:, NB:NB + cfg.num_stash][seg] == keys_lo[:, None, None]))
+        ok_s = jnp.any(m, axis=(1, 2))
+        val_s = jnp.max(jnp.where(m, state.val[:, NB:NB + cfg.num_stash][seg],
+                                  jnp.uint32(0)), axis=(1, 2))
+        values = jnp.where(found, values, val_s)
+        found = found | ok_s
+    return found, values
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1, 4, 5, 6))
+def route_writes(cfg: DashConfig, mode: str, state: DashState,
+                 payload, capacity: int, with_hints: bool = False,
+                 interpret: bool = True):
+    """Route a *write* batch by segment, carrying full key/value lanes.
+
+    ``payload`` is (keys_hi, keys_lo, vals, words, valid). Returns
+    ``(lanes, src, keep)`` where lanes is the dict the segment-parallel
+    engine scans: hi/lo/val/words/b/h1/h2/valid, each (S, C[, W]).
+
+    With ``with_hints=True`` the routed lanes are additionally pushed through
+    the Pallas fingerprint pass over the *same* plane views the search path
+    uses, returning per-lane (match_bits_b, match_bits_pb, free_slots_b,
+    free_slots_pb). The free-slot bitmaps are advisory (pre-batch state —
+    intra-batch inserts invalidate them): available to host-side admission
+    and capacity prechecks, never for the commit decision.
+    """
+    keys_hi, keys_lo, vals, words, valid = payload
+    h1 = hashing.hash1(keys_hi, keys_lo)
+    h2 = hashing.hash2(keys_hi, keys_lo)
+    seg, b = locate_batch(cfg, mode, state, h1)
+    planes, src, keep = route_lanes(
+        seg, (keys_hi, keys_lo, vals, words, b, h1, h2,
+              valid & (seg >= 0)),
+        cfg.max_segments, capacity,
+        (0, 0, 0, 0, 0, 0, 0, False))
+    lanes = dict(zip(("hi", "lo", "val", "words", "b", "h1", "h2", "valid"),
+                     planes))
+    if not with_hints:
+        return lanes, src, keep
+    fp_pad, alloc = plane_views(cfg, state)
+    q_fp = (lanes["h2"] & jnp.uint32(0xFF)).astype(jnp.int32)
+    q_b = jnp.where(lanes["valid"], lanes["b"].astype(jnp.int32), -1)
+    q_pb = jnp.where(lanes["valid"],
+                     (lanes["b"].astype(jnp.int32) + 1) & (cfg.num_buckets - 1),
+                     -1)
+    probe_fn = (probe_kernel.fingerprint_probe_jnp if interpret
+                else functools.partial(fingerprint_probe, interpret=False))
+    hints = probe_fn(fp_pad, alloc, q_fp, q_b, q_pb)
+    return lanes, src, keep, hints
 
 
 def bulk_hash_padded(keys_hi, keys_lo, interpret: bool = True):

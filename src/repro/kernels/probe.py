@@ -38,7 +38,8 @@ LANES = 128       # padded fingerprint lanes (16 real -> 128)
 NSLOTS = 14
 
 
-def _probe_block(fp_ref, alloc_ref, qfp_ref, qb_ref, qpb_ref, out_b_ref, out_pb_ref):
+def _probe_block(fp_ref, alloc_ref, qfp_ref, qb_ref, qpb_ref,
+                 out_b_ref, out_pb_ref, free_b_ref, free_pb_ref):
     """One (segment, query-block) program."""
     fp = fp_ref[0].astype(jnp.float32)              # (ROWS, LANES) — small ints, exact in f32
     alloc = alloc_ref[0]                            # (ROWS,) int32 — 14-bit bitmaps
@@ -55,10 +56,13 @@ def _probe_block(fp_ref, alloc_ref, qfp_ref, qb_ref, qpb_ref, out_b_ref, out_pb_
         for j in range(NSLOTS):
             abit = (galloc >> j) & 1
             bits = bits | ((eq[:, j].astype(jnp.int32) & abit) << j)
-        return bits
+        # free-slot bitmap of the same gathered bucket (reused by the insert
+        # router — same plane view, no extra gather); 0 for padding lanes
+        free = jnp.where(qb < 0, 0, (~galloc) & ((1 << NSLOTS) - 1))
+        return bits, free
 
-    out_b_ref[0] = gather_and_match(qb_ref[0])
-    out_pb_ref[0] = gather_and_match(qpb_ref[0])
+    out_b_ref[0], free_b_ref[0] = gather_and_match(qb_ref[0])
+    out_pb_ref[0], free_pb_ref[0] = gather_and_match(qpb_ref[0])
 
 
 @functools.partial(jax.jit, static_argnames=("interpret",))
@@ -72,12 +76,17 @@ def fingerprint_probe(fp_padded, alloc, q_fp, q_b, q_pb, *, interpret=True):
       q_b, q_pb: (S, C) int32 — target/probing bucket rows (-1 = padding).
 
     Returns:
-      (bits_b, bits_pb): (S, C) int32 — per-query 14-bit match bitmaps.
+      (bits_b, bits_pb, free_b, free_pb): (S, C) int32 — per-query 14-bit
+      match bitmaps for the target/probing bucket, plus the free-slot
+      bitmaps of the same buckets (bit j set = slot j unallocated; 0 on
+      padding lanes). The free bitmaps let the insert router reuse this
+      single gather pass: ``ctz(free_b)`` is Alg. 1's first-free-slot.
     """
     S, C = q_fp.shape
     assert C % BQ == 0, "query capacity must be a multiple of BQ"
     grid = (S, C // BQ)
     qspec = pl.BlockSpec((1, BQ), lambda s, c: (s, c))
+    out_i32 = jax.ShapeDtypeStruct((S, C), jnp.int32)
     return pl.pallas_call(
         _probe_block,
         grid=grid,
@@ -86,8 +95,33 @@ def fingerprint_probe(fp_padded, alloc, q_fp, q_b, q_pb, *, interpret=True):
             pl.BlockSpec((1, ROWS), lambda s, c: (s, 0)),
             qspec, qspec, qspec,
         ],
-        out_specs=[qspec, qspec],
-        out_shape=[jax.ShapeDtypeStruct((S, C), jnp.int32),
-                   jax.ShapeDtypeStruct((S, C), jnp.int32)],
+        out_specs=[qspec, qspec, qspec, qspec],
+        out_shape=[out_i32, out_i32, out_i32, out_i32],
         interpret=interpret,
     )(fp_padded, alloc, q_fp, q_b, q_pb)
+
+
+def _match_jnp(fp_padded, alloc, q_fp, qb):
+    safe = jnp.clip(qb, 0, fp_padded.shape[1] - 1)
+    rows = jnp.take_along_axis(fp_padded.astype(jnp.int32),
+                               safe[:, :, None], axis=1)[..., :NSLOTS]
+    a = jnp.take_along_axis(alloc, safe, axis=1)                # (S, C)
+    slot = jnp.arange(NSLOTS)
+    eq = (rows == q_fp[:, :, None]) & (((a[:, :, None] >> slot) & 1) == 1)
+    bits = jnp.sum(eq.astype(jnp.int32) << slot, axis=-1)
+    free = (~a) & ((1 << NSLOTS) - 1)
+    live = qb >= 0
+    return jnp.where(live, bits, 0), jnp.where(live, free, 0)
+
+
+@jax.jit
+def fingerprint_probe_jnp(fp_padded, alloc, q_fp, q_b, q_pb):
+    """Bit-identical jnp lowering of ``fingerprint_probe`` — the execution
+    path on non-TPU hosts. ``pl.pallas_call(interpret=True)`` pays
+    per-program interpreter overhead that defeats the kernel's purpose off
+    TPU; this lowering expresses the same gather+compare as two
+    ``take_along_axis`` passes that XLA:CPU fuses well. Tests pin it (and
+    the interpreted Pallas kernel) against the same oracle."""
+    bb, fb = _match_jnp(fp_padded, alloc, q_fp, q_b)
+    bp, fp_ = _match_jnp(fp_padded, alloc, q_fp, q_pb)
+    return bb, bp, fb, fp_

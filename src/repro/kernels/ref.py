@@ -23,11 +23,12 @@ def fingerprint_probe_ref(fp_padded, alloc, q_fp, q_b, q_pb):
             a = alloc_s[safe]
             eq = (row == qfp) & (((a >> jnp.arange(NSLOTS)) & 1) == 1)
             bits = jnp.sum(eq.astype(jnp.int32) << jnp.arange(NSLOTS))
-            return jnp.where(qb < 0, 0, bits)
+            free = (~a) & ((1 << NSLOTS) - 1)
+            return jnp.where(qb < 0, 0, bits), jnp.where(qb < 0, 0, free)
 
-        bb = jax.vmap(match)(qb_s, qfp_s)
-        bp = jax.vmap(match)(qpb_s, qfp_s)
-        return bb, bp
+        bb, fb = jax.vmap(match)(qb_s, qfp_s)
+        bp, fp_ = jax.vmap(match)(qpb_s, qfp_s)
+        return bb, bp, fb, fp_
 
     return jax.vmap(per_segment)(fp_padded, alloc, q_fp, q_b, q_pb)
 

@@ -134,11 +134,19 @@ class ServingEngine:
 # optimistic snapshot search (system-level Sec. 4.4)
 # ---------------------------------------------------------------------------
 
-def snapshot_search(cfg, old_state, new_state, keys_hi, keys_lo):
+def snapshot_search(cfg, old_state, new_state, keys_hi, keys_lo,
+                    batching: str = "auto"):
     """Search against a snapshot while writers published ``new_state``;
     verify per-touched-bucket versions and retry changed queries on the new
-    version. Returns (found, values, n_retried)."""
-    found, vals = dash_engine.search_batch(cfg, "eh", old_state, keys_hi, keys_lo)
+    version. Returns (found, values, n_retried).
+
+    Both lookups go through ``engine.search_batch``'s default read path —
+    the segment-routed Pallas fingerprint kernel on eligible configs — so
+    the optimistic snapshot composition rides the fast path too; the
+    version-plane verification below is unchanged (it reads bucket version
+    words, not records)."""
+    found, vals = dash_engine.search_batch(cfg, "eh", old_state, keys_hi,
+                                           keys_lo, batching=batching)
     from repro.core import hashing, layout
     h1 = hashing.hash1(keys_hi, keys_lo)
     seg = old_state.dir[layout.dir_index(cfg, h1)]
@@ -147,7 +155,8 @@ def snapshot_search(cfg, old_state, new_state, keys_hi, keys_lo):
     changed = ((old_state.version[seg, b] != new_state.version[seg, b]) |
                (old_state.version[seg, pb] != new_state.version[seg, pb]) |
                (seg != new_state.dir[layout.dir_index(cfg, h1)]))
-    f2, v2 = dash_engine.search_batch(cfg, "eh", new_state, keys_hi, keys_lo)
+    f2, v2 = dash_engine.search_batch(cfg, "eh", new_state, keys_hi, keys_lo,
+                                      batching=batching)
     found = jnp.where(changed, f2, found)
     vals = jnp.where(changed, v2, vals)
     return found, vals, jnp.sum(changed)

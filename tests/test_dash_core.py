@@ -1,7 +1,7 @@
 """Dash-EH/LH correctness: dict-oracle property tests + invariants."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import (DashConfig, DashEH, DashLH, EXISTS, INSERTED,
                         NOT_FOUND)

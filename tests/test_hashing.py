@@ -1,7 +1,7 @@
 """Hash function properties + jnp/numpy bit-exactness."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from tests._hypothesis_compat import given, settings, st
 
 from repro.core import hashing
 

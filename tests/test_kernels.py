@@ -8,7 +8,7 @@ from repro.core import DashConfig, DashEH, INSERTED
 from repro.core.hashing import np_split_keys
 from repro.kernels import ops, ref
 from repro.kernels.hashmix import BLOCK, bulk_hash
-from repro.kernels.probe import BQ, fingerprint_probe
+from repro.kernels.probe import BQ, fingerprint_probe, fingerprint_probe_jnp
 from tests.conftest import unique_keys
 
 
@@ -35,10 +35,24 @@ def test_probe_kernel_sweep(segments, capacity, fill, rng):
     hi, lo = np_split_keys(keys[:256])
     qf, qb, qpb, qsrc, keep = ops.route_queries(
         cfg, t.state, jnp.asarray(hi), jnp.asarray(lo), capacity)
-    kb, kp = fingerprint_probe(fp_pad, alloc, qf, qb, qpb)
-    rb, rp = ref.fingerprint_probe_ref(fp_pad, alloc, qf, qb, qpb)
-    np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
-    np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+    rb, rp, rfb, rfp = ref.fingerprint_probe_ref(fp_pad, alloc, qf, qb, qpb)
+    # both lowerings — the Pallas kernel (interpreted) and the jnp CPU path —
+    # must match the oracle bit-for-bit
+    for probe_fn in (fingerprint_probe, fingerprint_probe_jnp):
+        kb, kp, kfb, kfp = probe_fn(fp_pad, alloc, qf, qb, qpb)
+        np.testing.assert_array_equal(np.asarray(kb), np.asarray(rb))
+        np.testing.assert_array_equal(np.asarray(kp), np.asarray(rp))
+        np.testing.assert_array_equal(np.asarray(kfb), np.asarray(rfb))
+        np.testing.assert_array_equal(np.asarray(kfp), np.asarray(rfp))
+    # free-slot bitmaps disjoint from the alloc bitmap of the same bucket
+    qb_np, fb_np = np.asarray(qb), np.asarray(kfb)
+    al = np.asarray(alloc)
+    for s in range(qb_np.shape[0]):
+        live = qb_np[s] >= 0
+        got_alloc = al[s][np.clip(qb_np[s], 0, al.shape[1] - 1)]
+        assert ((fb_np[s][live] & got_alloc[live]) == 0).all()
+        np.testing.assert_array_equal(          # free = ~alloc within 14 bits
+            fb_np[s][live], (~got_alloc[live]) & 0x3FFF)
 
 
 def test_probe_routed_end_to_end(rng):
@@ -56,6 +70,33 @@ def test_probe_routed_end_to_end(rng):
     nh, nl = np_split_keys(neg)
     nf, _, nkeep = ops.probe_routed(cfg, t.state, jnp.asarray(nh), jnp.asarray(nl))
     assert np.asarray(nf)[np.asarray(nkeep)].sum() == 0
+
+
+def test_route_writes_hints_match_planes(rng):
+    """Insert-router hints (match bits + free-slot bitmaps) come from the
+    same plane views as the search path and match the oracle."""
+    cfg = DashConfig(max_segments=8, dir_depth_max=7)
+    t = DashEH(cfg)
+    keys = unique_keys(rng, 1200)
+    t.insert(keys, np.arange(1200, dtype=np.uint32))
+    hi, lo = np_split_keys(keys[:256])
+    hi, lo = jnp.asarray(hi), jnp.asarray(lo)
+    payload = (hi, lo, jnp.zeros(256, jnp.uint32),
+               jnp.zeros((256, cfg.key_heap_words), jnp.uint32),
+               jnp.ones(256, jnp.bool_))
+    lanes, src, keep, hints = ops.route_writes(cfg, "eh", t.state, payload,
+                                               128, True)
+    fp_pad, alloc = ops.plane_views(cfg, t.state)
+    q_fp = (lanes["h2"] & jnp.uint32(0xFF)).astype(jnp.int32)
+    q_b = jnp.where(lanes["valid"], lanes["b"], -1)
+    q_pb = jnp.where(lanes["valid"], (lanes["b"] + 1) & (cfg.num_buckets - 1),
+                     -1)
+    want = ref.fingerprint_probe_ref(fp_pad, alloc, q_fp, q_b, q_pb)
+    for got, wnt in zip(hints, want):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(wnt))
+    # the inserted keys are present: every valid lane's match bits must hit
+    bits = np.asarray(hints[0]) | np.asarray(hints[1])
+    assert (bits[np.asarray(lanes["valid"])] != 0).all()
 
 
 def test_probe_kernel_agrees_with_engine_search(rng):
