@@ -51,10 +51,10 @@ def run():
         hi, lo = jnp.asarray(hi_np), jnp.asarray(lo_np)
         vals = jnp.asarray(np.arange(B, dtype=np.uint32))
 
-        # host-side lane capacity, exactly like DashTable._write_plan
-        seg = np.asarray(base.dir)[hashing.np_hash1(hi_np, lo_np)
-                                   >> np.uint32(32 - cfg.dir_depth_max)]
-        cap = DashEH._lane_quantum(int(np.bincount(seg).max()))
+        # host-side lane capacity through the table's own planner (one copy
+        # of the directory mirror + capacity rule)
+        seg = t._segments_of(hi_np, lo_np)
+        cap = t._lane_quantum(t._max_per_segment(seg))
 
         # --- differential check before timing (bit-identical engines) ---
         s_scan, st_scan, _ = engine.insert_batch(

@@ -15,6 +15,7 @@ Modules map 1:1 to the paper's artifacts:
   extra  dht_roofline         256-chip DHT fabric-vs-HBM accounting
   extra  kernel_probe         Pallas probe path timing (interpret)
   extra  batch_parallel       segment-parallel vs scan engine (+ JSON artifact)
+  extra  smo                  bulk vs scalar split/merge SMOs (+ JSON artifact)
 """
 from __future__ import annotations
 
@@ -37,6 +38,7 @@ MODULES = [
     ("dht", "benchmarks.dht_roofline"),
     ("kernel", "benchmarks.kernel_probe"),
     ("batchpar", "benchmarks.batch_parallel"),
+    ("smo", "benchmarks.smo"),
 ]
 
 

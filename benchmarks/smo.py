@@ -1,0 +1,153 @@
+"""SMO engine: bulk multi-segment split/merge vs the scalar SMO loop.
+
+Three scenarios from the structural path the PR vectorizes:
+  * ``splits@8`` — 8 concurrently pressured segments: one bulk dispatch
+    (vmapped rebuild + single directory publish) vs 8 sequential scan-rehash
+    SMOs. Before timing, asserts logical state equivalence (per-segment
+    record sets + directory + depths) between the two paths.
+  * ``fill64`` — grow a fresh 2-segment table to the full 64-segment pool
+    (the directory-doubling scenario): wall time with ``smo_mode="scalar"`` vs
+    ``smo_mode="bulk"`` tables, recorded in the same run.
+  * ``shrink`` — delete 90% then merge everything mergeable: per-merge
+    replanning + scan merges vs one-counts-pass rounds of bulk merges.
+
+Emits ``BENCH_smo.json``.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DashConfig, DashEH, TableFullError, dash_eh, engine, smo
+from .common import Row, ops_row, time_op, unique_keys
+
+CFG = DashConfig(max_segments=64, dir_depth_max=9)
+N_PRESSURED = 8
+
+
+def _copy(state):
+    return jax.tree.map(jnp.copy, state)
+
+
+_recset = smo.segment_record_set
+
+
+def _scalar_splits(state, segs, news):
+    for o, n in zip(segs, news):
+        state, ok = dash_eh.split_segment(CFG, state, o, n, impl="scan")
+        assert bool(ok)
+    return state
+
+
+def _fill_to_pool(t, pool, batch=4096):
+    """Insert a fixed keyset (sized to grow the table to the full segment
+    pool); both SMO modes do identical work unless the pool runs out."""
+    t0 = time.perf_counter()
+    i = 0
+    vals = np.arange(batch, dtype=np.uint32)
+    while i < pool.size:
+        try:
+            t.insert(pool[i:i + batch], vals[:min(batch, pool.size - i)])
+        except TableFullError:
+            break                      # pool exhausted mid-batch: expected end
+        i += batch
+    return time.perf_counter() - t0, t.n_segments, i
+
+
+def run():
+    rng = np.random.default_rng(0x5140)
+    report = {}
+    rows = []
+
+    # --- grow a base table, pick 8 pressured segments ------------------------
+    t = DashEH(CFG)
+    warm = unique_keys(rng, 22_000)
+    t.insert(warm, np.arange(22_000, dtype=np.uint32))
+    base = t.state
+    wm = int(np.asarray(base.watermark))
+    depths = np.asarray(base.local_depth)
+    segs = [int(s) for s in np.unique(np.asarray(base.dir))
+            if depths[s] < CFG.dir_depth_max][:N_PRESSURED]
+    news = list(range(wm, wm + len(segs)))
+    assert len(segs) == N_PRESSURED and news[-1] < CFG.max_segments
+    report["segments"] = int(len(np.unique(np.asarray(base.dir))))
+
+    # --- differential check before timing (logical state equivalence) -------
+    s_scalar = _scalar_splits(_copy(base), segs, news)
+    s_bulk, _ = smo.bulk_split(CFG, _copy(base), segs, news)
+    assert (np.asarray(s_scalar.dir) == np.asarray(s_bulk.dir)).all()
+    assert (np.asarray(s_scalar.local_depth)
+            == np.asarray(s_bulk.local_depth)).all()
+    assert int(s_scalar.n_items) == int(s_bulk.n_items)
+    for seg in range(wm + len(segs)):
+        assert _recset(CFG, s_scalar, seg) == _recset(CFG, s_bulk, seg), seg
+
+    # --- timings (state copy cost included identically in both) -------------
+    t_scalar = time_op(lambda: jax.block_until_ready(
+        _scalar_splits(_copy(base), segs, news).meta))
+    t_bulk = time_op(lambda: jax.block_until_ready(
+        smo.bulk_split(CFG, _copy(base), segs, news)[0].meta))
+    report["splits_at_8"] = {
+        "scalar_s": t_scalar,
+        "bulk_s": t_bulk,
+        "scalar_splits_per_s": N_PRESSURED / t_scalar,
+        "bulk_splits_per_s": N_PRESSURED / t_bulk,
+        "speedup": t_scalar / t_bulk,
+    }
+    rows += [
+        ops_row(f"smo/split_scalar@{N_PRESSURED}", t_scalar, N_PRESSURED),
+        ops_row(f"smo/split_bulk@{N_PRESSURED}", t_bulk, N_PRESSURED,
+                extra=f"{t_scalar / t_bulk:.2f}x vs scalar loop"),
+    ]
+
+    # --- fill-from-2-segments to the full pool (same run, both modes) -------
+    pool = unique_keys(rng, 32_768)
+    t_s = DashEH(CFG, smo_mode="scalar")
+    fill_scalar_s, segs_s, used_s = _fill_to_pool(t_s, pool)
+    t_b = DashEH(CFG, smo_mode="bulk")
+    fill_bulk_s, segs_b, used_b = _fill_to_pool(t_b, pool)
+    # the wall-time comparison is only meaningful over identical work
+    assert used_s == used_b and segs_s == segs_b, (used_s, used_b, segs_s, segs_b)
+    report["fill_to_pool"] = {
+        "scalar_s": fill_scalar_s, "scalar_segments": int(segs_s),
+        "bulk_s": fill_bulk_s, "bulk_segments": int(segs_b),
+        "keys_scalar": int(used_s), "keys_bulk": int(used_b),
+        "speedup": fill_scalar_s / fill_bulk_s,
+    }
+    rows += [
+        Row("smo/fill_pool_scalar", fill_scalar_s * 1e6,
+            f"{segs_s} segments, {used_s} keys"),
+        Row("smo/fill_pool_bulk", fill_bulk_s * 1e6,
+            f"{segs_b} segments, {used_b} keys; "
+            f"{fill_scalar_s / fill_bulk_s:.2f}x vs scalar"),
+    ]
+
+    # --- shrink: bulk rounds vs per-merge replanning -------------------------
+    shrink_times = {}
+    for tag, tbl, keys_used in (("scalar", t_s, used_s), ("bulk", t_b, used_b)):
+        tbl.delete(pool[:keys_used][np.arange(keys_used) % 10 != 0])
+        t0 = time.perf_counter()
+        merges = tbl.shrink(target_fill=0.8)
+        shrink_times[tag] = {"seconds": time.perf_counter() - t0,
+                             "merges": int(merges)}
+        assert tbl.n_items == int(np.asarray(engine.recount_items(tbl.state)))
+    report["shrink"] = shrink_times
+    rows += [
+        Row("smo/shrink_scalar", shrink_times["scalar"]["seconds"] * 1e6,
+            f"{shrink_times['scalar']['merges']} merges"),
+        Row("smo/shrink_bulk", shrink_times["bulk"]["seconds"] * 1e6,
+            f"{shrink_times['bulk']['merges']} merges"),
+    ]
+
+    with open("BENCH_smo.json", "w") as f:
+        json.dump(report, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -9,11 +9,13 @@ Public API:
 from .layout import (DashConfig, DashState, make_state, load_factor,
                      INSERTED, EXISTS, NEED_SPLIT, DROPPED, NOT_FOUND)
 from .table import DashEH, DashLH, DashTable, TableFullError
-from . import bucket, dash_eh, dash_lh, engine, hashing, layout, recovery
+from . import (bucket, dash_eh, dash_lh, engine, hashing, layout, recovery,
+               smo)
 
 __all__ = [
     "DashConfig", "DashState", "make_state", "load_factor",
     "DashEH", "DashLH", "DashTable", "TableFullError",
     "INSERTED", "EXISTS", "NEED_SPLIT", "DROPPED", "NOT_FOUND",
     "bucket", "dash_eh", "dash_lh", "engine", "hashing", "layout", "recovery",
+    "smo",
 ]

@@ -65,16 +65,20 @@ def _clear_segment(cfg: DashConfig, state: DashState, seg):
 
 
 @functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=(1,))
-def split_phase2(cfg: DashConfig, state: DashState, old_seg, new_seg,
-                 check_unique: bool = False):
-    """Rehash + directory publish. With ``check_unique=True`` (the recovery
-    path) it is idempotent w.r.t. records already moved — the paper's "redo
-    the rehashing with uniqueness check"; the normal path skips the probe.
+def split_phase2_scan(cfg: DashConfig, state: DashState, old_seg, new_seg,
+                      check_unique: bool = False):
+    """Per-record scan rehash + directory publish (the reference SMO path,
+    retained for differential testing and as the fallback for configs /
+    packings the vectorized rebuild does not cover). With
+    ``check_unique=True`` (the recovery path) it is idempotent w.r.t.
+    records already moved — the paper's "redo the rehashing with uniqueness
+    check"; the normal path skips the probe.
 
     Returns (state, all_refit) — all_refit is False only if a record could not
     be placed in either half (cannot happen for a subset of a feasible
     segment; asserted by the host wrapper).
     """
+    n0 = state.n_items                        # splits move records: net zero
     ld_new = state.local_depth[old_seg]       # already ld+1 after phase 1
     ld = ld_new - 1
     hi, lo, val, valid = engine.segment_records(cfg, state, old_seg)
@@ -119,20 +123,39 @@ def split_phase2(cfg: DashConfig, state: DashState, old_seg, new_seg,
                                  .at[new_seg].set(SEG_NORMAL),
         seg_version=state.seg_version.at[old_seg].set(state.gver)
                                      .at[new_seg].set(state.gver),
-        n_items=0,  # recomputed below
+        n_items=n0,  # incremental accounting: a split never changes the count
         version=state.version.at[old_seg].add(U32(2)).at[new_seg].add(U32(2)),
     )
-    state = state._replace(n_items=engine.recount_items(state))
     return state, jnp.all(fits)
 
 
-def split_segment(cfg: DashConfig, state: DashState, old_seg, new_seg=None):
-    """Full SMO = phase 1 + phase 2 (host-visible convenience)."""
+def split_phase2(cfg: DashConfig, state: DashState, old_seg, new_seg,
+                 check_unique: bool = False):
+    """Rehash + publish through the vectorized SMO engine (one-pass segment
+    rebuild, core/smo.py); falls back to the scan rehash for configs or
+    packings the rebuild does not cover. Returns (state, all_refit)."""
+    from . import smo
+    if not smo.rebuild_eligible(cfg):
+        return split_phase2_scan(cfg, state, old_seg, new_seg, check_unique)
+    old = jnp.asarray(old_seg, jnp.int32).reshape(1)
+    new = jnp.asarray(new_seg, jnp.int32).reshape(1)
+    state, ok = smo.bulk_split_phase2(cfg, state, old, new,
+                                      jnp.ones((1,), jnp.bool_), check_unique)
+    if not bool(ok[0]):
+        return split_phase2_scan(cfg, state, old_seg, new_seg, check_unique)
+    return state, jnp.asarray(True)
+
+
+def split_segment(cfg: DashConfig, state: DashState, old_seg, new_seg=None,
+                  impl: str = "rebuild"):
+    """Full SMO = phase 1 + phase 2 (host-visible convenience).
+    ``impl="scan"`` forces the per-record reference rehash."""
     if new_seg is not None:
         new_seg = jnp.asarray(new_seg, jnp.int32)
     state, new_seg = split_phase1(cfg, state, jnp.asarray(old_seg, jnp.int32),
                                   new_seg)
-    return split_phase2(cfg, state, jnp.asarray(old_seg, jnp.int32), new_seg)
+    phase2 = split_phase2_scan if impl == "scan" else split_phase2
+    return phase2(cfg, state, jnp.asarray(old_seg, jnp.int32), new_seg)
 
 
 # ---------------------------------------------------------------------------
@@ -141,12 +164,15 @@ def split_segment(cfg: DashConfig, state: DashState, old_seg, new_seg=None):
 # ---------------------------------------------------------------------------
 
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
-def merge_segments(cfg: DashConfig, state: DashState, keep_seg, victim_seg):
-    """Merge ``victim`` into its buddy ``keep`` (same parent prefix, same
-    local depth). The caller guarantees the pair is a buddy pair and that
-    the combined records fit (host checks counts). The victim's directory
-    range is pointed back at ``keep`` and both drop one depth level —
-    the inverse of a split. Returns (state, all_refit)."""
+def merge_segments_scan(cfg: DashConfig, state: DashState, keep_seg,
+                        victim_seg):
+    """Per-record scan merge of ``victim`` into its buddy ``keep`` (same
+    parent prefix, same local depth) — the reference path, retained for
+    differential testing. The caller guarantees the pair is a buddy pair
+    and that the combined records fit (host checks counts). The victim's
+    directory range is pointed back at ``keep`` and both drop one depth
+    level — the inverse of a split. Returns (state, all_refit)."""
+    n0 = state.n_items
     hi, lo, val, valid = engine.segment_records(cfg, state, victim_seg)
     h1, h2 = engine.record_hashes(cfg, state, hi, lo)
 
@@ -174,24 +200,39 @@ def merge_segments(cfg: DashConfig, state: DashState, keep_seg, victim_seg):
         side_link=state.side_link.at[keep_seg].set(state.side_link[victim_seg]),
         seg_state=state.seg_state.at[victim_seg].set(SEG_NORMAL),
         version=state.version.at[keep_seg].add(U32(2)),
-        n_items=0,
+        n_items=n0,  # incremental accounting: a merge never changes the count
     )
-    state = state._replace(n_items=engine.recount_items(state))
     return state, jnp.all(fits)
+
+
+def merge_segments(cfg: DashConfig, state: DashState, keep_seg, victim_seg):
+    """Merge through the vectorized SMO engine (one-pass rebuild of the
+    combined record set); scan fallback mirrors split_phase2."""
+    from . import smo
+    if not smo.rebuild_eligible(cfg):
+        return merge_segments_scan(cfg, state, keep_seg, victim_seg)
+    keep = jnp.asarray(keep_seg, jnp.int32).reshape(1)
+    victim = jnp.asarray(victim_seg, jnp.int32).reshape(1)
+    state, ok = smo.bulk_merge(cfg, state, keep, victim,
+                               jnp.ones((1,), jnp.bool_))
+    if not bool(ok[0]):
+        return merge_segments_scan(cfg, state, keep_seg, victim_seg)
+    return state, jnp.asarray(True)
 
 
 def find_buddy(cfg: DashConfig, state: DashState, seg: int):
     """Host helper: the buddy of ``seg`` is the segment owning the sibling
-    prefix at the same local depth (its directory range is adjacent)."""
-    import numpy as np
+    prefix at the same local depth (its directory range is adjacent).
+    One directory gather — no per-entry scan (see smo.find_buddy_pairs for
+    the all-pairs version the shrink planner uses)."""
     dirv = np.asarray(state.dir)
     depths = np.asarray(state.local_depth)
     ld = int(depths[seg])
     if ld == 0:
         return None
-    entries = np.where(dirv == seg)[0]
-    span = 1 << (cfg.dir_depth_max - ld)
-    first = int(entries[0])
+    first = int(np.argmax(dirv == seg))
+    if dirv[first] != seg:                   # seg owns no directory range
+        return None
     prefix = first >> (cfg.dir_depth_max - ld)
     sib_first = (prefix ^ 1) << (cfg.dir_depth_max - ld)
     buddy = int(dirv[sib_first])

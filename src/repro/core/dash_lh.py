@@ -28,9 +28,39 @@ from .layout import (EXISTS, NEED_SPLIT, SEG_NORMAL, DashConfig, DashState, U32)
 I32 = jnp.int32
 
 
+def _rehash_scan(cfg: DashConfig, state: DashState, seg):
+    """Shared scan-rehash body: extract one segment's records, clear it,
+    re-insert every record through *current* LH addressing. ``n_items`` is
+    restored (a rehash moves records — net zero). Returns (state, ok)."""
+    n0 = state.n_items
+    hi, lo, val, valid = engine.segment_records(cfg, state, seg)
+    h1, h2 = engine.record_hashes(cfg, state, hi, lo)
+    state = _clear_segment(cfg, state, seg)
+
+    def step(st, xs):
+        r_hi, r_lo, r_val, r_valid, r_h1, r_h2 = xs
+        dseg = st.lh_dir[layout.lh_logical_segment(cfg, r_h1, st.lh_word)]
+        b = layout.lh_bucket_index(cfg, r_h1)
+
+        def do(s):
+            s2, status, _ = engine._insert_core(
+                cfg, s, dseg, b, r_h1, r_h2, r_hi, r_lo,
+                jnp.zeros((cfg.key_heap_words,), U32), r_val,
+                check_unique=False, heap_append=False)
+            return s2, status
+
+        st, status = jax.lax.cond(r_valid, do, lambda s: (s, I32(EXISTS)), st)
+        return st, status != I32(NEED_SPLIT)
+
+    state, fits = jax.lax.scan(step, state, (hi, lo, val, valid, h1, h2))
+    return state._replace(n_items=n0), jnp.all(fits)
+
+
 @functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
-def split_next(cfg: DashConfig, state: DashState):
-    """Split the segment at Next; advance (level, Next); returns (state, ok)."""
+def split_next_scan(cfg: DashConfig, state: DashState):
+    """Split the segment at Next with the per-record scan rehash; advance
+    (level, Next); returns (state, ok). Reference path, retained for
+    differential testing against the vectorized SMO engine."""
     level, nxt = layout.lh_level_next(state.lh_word)
     n_round = 1 << cfg.lh_base_log2
     round_size = (n_round << level.astype(jnp.uint32)).astype(I32)
@@ -55,33 +85,30 @@ def split_next(cfg: DashConfig, state: DashState):
         seg_version=state.seg_version.at[new_phys].set(state.gver),
     )
 
-    # rehash: extract old records, clear, re-insert through LH addressing
-    hi, lo, val, valid = engine.segment_records(cfg, state, old_phys)
-    h1, h2 = engine.record_hashes(cfg, state, hi, lo)
-    state = _clear_segment(cfg, state, old_phys)
+    state, fits = _rehash_scan(cfg, state, old_phys)
+    return state._replace(n_splits=state.n_splits + 1), fits
 
-    def step(st, xs):
-        r_hi, r_lo, r_val, r_valid, r_h1, r_h2 = xs
-        seg = st.lh_dir[layout.lh_logical_segment(cfg, r_h1, st.lh_word)]
-        b = layout.lh_bucket_index(cfg, r_h1)
 
-        def do(s):
-            s2, status, _ = engine._insert_core(
-                cfg, s, seg, b, r_h1, r_h2, r_hi, r_lo,
-                jnp.zeros((cfg.key_heap_words,), U32), r_val,
-                check_unique=False, heap_append=False)
-            return s2, status
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def rehash_segment_scan(cfg: DashConfig, state: DashState, seg):
+    """Scan-rehash fallback for one lane of a bulk expansion whose
+    vectorized rebuild reported an infeasible packing. The (level, Next)
+    word is already advanced, so this is exactly the tail of
+    split_next_scan. Returns (state, ok)."""
+    return _rehash_scan(cfg, state, seg)
 
-        st, status = jax.lax.cond(r_valid, do, lambda s: (s, I32(EXISTS)), st)
-        return st, status != I32(NEED_SPLIT)
 
-    state, fits = jax.lax.scan(step, state, (hi, lo, val, valid, h1, h2))
-
-    state = state._replace(
-        n_splits=state.n_splits + 1,
-        n_items=engine.recount_items(state),
-    )
-    return state, jnp.all(fits)
+def split_next(cfg: DashConfig, state: DashState):
+    """Split the segment at Next through the vectorized SMO engine
+    (``smo.bulk_split_next`` with a stride of 1); scan fallback for configs
+    or packings the rebuild does not cover. Returns (state, ok)."""
+    from . import smo
+    if not smo.rebuild_eligible(cfg):
+        return split_next_scan(cfg, state)
+    state, ok, old_phys = smo.bulk_split_next(cfg, state, 1)
+    if not bool(ok[0]):
+        return rehash_segment_scan(cfg, state, old_phys[0])
+    return state, jnp.asarray(True)
 
 
 def lh_active_segments(cfg: DashConfig, state: DashState) -> int:

@@ -78,7 +78,7 @@ def probe_in_segment(cfg: DashConfig, state: DashState, seg, b, h2,
     """Full lookup inside one segment: window buckets, then stash via
     overflow metadata (Alg. 3). Returns (found, value)."""
     fpv = hashing.fingerprint(h2)
-    window = 2 if cfg.use_balanced else max(cfg.probe_len, 1)
+    window = cfg.probe_window
 
     found = jnp.asarray(False)
     value = U32(0)
@@ -281,7 +281,7 @@ def _insert_core(cfg: DashConfig, state: DashState, seg, b, h1, h2,
 def delete_in_segment(cfg: DashConfig, state: DashState, seg, b, h2,
                       q_hi, q_lo, q_words):
     fpv = hashing.fingerprint(h2)
-    window = 2 if cfg.use_balanced else max(cfg.probe_len, 1)
+    window = cfg.probe_window
 
     # locate in window buckets
     found_w = jnp.asarray(False)
@@ -672,7 +672,7 @@ def update_in_segment(cfg: DashConfig, state: DashState, seg, b, h2,
                       q_hi, q_lo, q_words, v):
     """Set the payload of an existing key within a known segment."""
     fpv = hashing.fingerprint(h2)
-    window = 2 if cfg.use_balanced else max(cfg.probe_len, 1)
+    window = cfg.probe_window
     status = I32(NOT_FOUND)
     for wo in range(window):
         bw = _wrap(cfg, b + wo)
@@ -778,8 +778,12 @@ def segment_records(cfg: DashConfig, state: DashState, seg):
 
 def recount_items(state: DashState):
     """Exact global record count from the packed per-bucket counters.
-    Used after SMOs/recovery, where moves + crash-dedupe make incremental
-    accounting unreliable (cheap: one vectorized reduction)."""
+
+    ``n_items`` is maintained incrementally everywhere (SMOs move records —
+    net zero; crash-duplicated slots were never counted, so recovery's
+    dedupe restores agreement without touching the total). This full
+    recount is the *audit*: tests assert ``n_items == recount_items`` after
+    split/merge/shrink/recovery workloads."""
     return jnp.sum(layout.meta_count(state.meta).astype(I32))
 
 

@@ -96,6 +96,14 @@ class DashConfig:
         return 1 << self.dir_depth_max
 
     @property
+    def probe_window(self) -> int:
+        """Buckets a record may land in from its home bucket onward: the
+        balanced b/(b+1) pair, or the linear-probing window. The single
+        source of truth shared by search, delete, update, and the SMO
+        rebuild's spill schedule."""
+        return 2 if self.use_balanced else max(self.probe_len, 1)
+
+    @property
     def seg_capacity(self) -> int:
         return self.buckets_total * self.num_slots
 

@@ -128,10 +128,12 @@ def recover_segment(cfg: DashConfig, mode: str, state: DashState, seg):
 
         state, _ = jax.lax.scan(step, state, (s_ids, slot_flat))
 
+    # n_items stays put: crash artifacts (duplicate slots from half-done
+    # displacements) were never counted, so removing them restores the meta
+    # counts to agree with the incrementally-maintained total — no
+    # whole-table recount (tests assert n_items == engine.recount_items).
     state = state._replace(
-        seg_version=state.seg_version.at[seg].set(state.gver),
-        n_items=engine.recount_items(state),
-    )
+        seg_version=state.seg_version.at[seg].set(state.gver))
     return state
 
 
@@ -152,7 +154,10 @@ def recover_segment_host(cfg: DashConfig, mode: str, state: DashState, seg: int)
     if mode == "eh" and seg_states[seg] == SEG_SPLITTING:
         nbr = int(side[seg])
         if nbr >= 0 and seg_states[nbr] == SEG_NEW:
-            # continue the split: phase 2 is idempotent (uniqueness-checked)
+            # continue the split: phase 2 is idempotent (uniqueness-checked).
+            # split_phase2 dispatches to the vectorized SMO rebuild, which
+            # extracts BOTH halves and dedupes before placing (the paper's
+            # "redo the rehashing with uniqueness check").
             state, ok = dash_eh.split_phase2(
                 cfg, state, jnp.asarray(seg, jnp.int32), jnp.asarray(nbr, jnp.int32),
                 True)

@@ -1,0 +1,485 @@
+"""Device-parallel SMO engine: vectorized segment rebuild + bulk split/merge.
+
+The data path went segment-parallel in PR 1; this module does the same for
+the *structural* path (splits, merges, recovery redo — the SMOs of paper
+Sec. 4.7). Two ideas:
+
+**Vectorized rebuild.** A splitting/merging segment's records are extracted
+once, partitioned by move-bit, and placed in a single pass: target buckets
+and intra-bucket ranks come from the shared sort-based dispatcher
+(``kernels/ops.group_ranks``), balanced-insert capacity is solved by a
+carry recurrence over the bucket ring (the EDF schedule of the two-choice
+b/b+1 placement — spill-in is served before home records, which dominates
+the scan path's insert-order greedy + displacement), and the leftover goes
+to the stash with overflow metadata rebuilt as one more rank/scatter.  No
+per-record control flow: records of a feasible segment always fit, and the
+rare infeasible rebuild is *not committed* (the caller falls back to the
+retained scan rehash for exactly that segment).
+
+**Bulk dispatch.** The rebuild is ``vmap``-ed across every segment pressured
+in one batch round: one directory publish, one watermark bump, one
+seg-state/version scatter — K splits cost one device dispatch instead of K.
+The same machinery serves EH splits (``bulk_split``), LH round expansion
+(``bulk_split_next``), buddy merges (``bulk_merge``) and crash-recovery redo
+(``check_unique=True`` extracts *both* halves and dedupes before rebuilding,
+the paper's "redo the rehashing with uniqueness check", Sec. 4.8).
+
+Item accounting is incremental: SMOs move records, so ``n_items`` is never
+recounted from the whole table (tests assert equality against the full
+recount).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import engine, hashing, layout
+from .layout import (SEG_NEW, SEG_NORMAL, SEG_SPLITTING, DashConfig,
+                     DashState, U32)
+
+I32 = jnp.int32
+
+
+def rebuild_eligible(cfg: DashConfig) -> bool:
+    """Configs the one-pass rebuild covers exactly: the balanced b/(b+1)
+    two-choice layout, or probe windows the single-spill schedule spans.
+    Wider linear-probe ablations (CCEH probe-4) keep the scan rehash."""
+    return cfg.use_balanced or cfg.probe_len <= 2
+
+
+# ---------------------------------------------------------------------------
+# vectorized rebuild of one segment-set (vmapped across the SMO batch)
+# ---------------------------------------------------------------------------
+
+def dedupe_records(hi, lo, valid):
+    """Drop all-but-first copies of duplicate (hi, lo) keys (recovery redo:
+    a crash between displacement steps or mid-SMO leaves the same record in
+    two buckets/halves). Lex sort by (valid desc, hi, lo); duplicates are
+    adjacent. Returns the pruned valid mask (input order)."""
+    order = jnp.argsort(lo)
+    order = order[jnp.argsort(hi[order])]
+    order = order[jnp.argsort(~valid[order])]
+    hi_s, lo_s, v_s = hi[order], lo[order], valid[order]
+    dup = jnp.concatenate([
+        jnp.zeros((1,), jnp.bool_),
+        (hi_s[1:] == hi_s[:-1]) & (lo_s[1:] == lo_s[:-1]) & v_s[1:] & v_s[:-1]])
+    return jnp.zeros_like(valid).at[order].set(v_s & ~dup)
+
+
+def rebuild_records(cfg: DashConfig, T: int, stash_base: int,
+                    hi, lo, val, valid, fpv, b, tgt):
+    """Place N records into T fresh segment images in one pass.
+
+    ``b`` is each record's home bucket, ``tgt`` its target segment index in
+    [0, T).  Placement = EDF over the two-choice (b, b+1) ring: a carry
+    recurrence computes per-bucket spill-in, ranks within (tgt, bucket)
+    groups assign slots, the remainder ranks into the stash, and overflow
+    metadata is rebuilt by one more grouped rank.  Returns
+    (planes, stash_active (T,), ok); ``ok`` is False iff some record did not
+    fit (caller must not commit the planes in that case).
+    """
+    from repro.kernels import ops
+    NB, SL, BT, NS = (cfg.num_buckets, cfg.num_slots, cfg.buckets_total,
+                      cfg.num_stash)
+    window = cfg.probe_window
+    spill = window >= 2
+
+    valid = valid & (tgt >= 0) & (tgt < T)
+    tgt_c = jnp.clip(tgt, 0, T - 1)
+    gid = jnp.where(valid, tgt_c * NB + b, T * NB)
+    r = ops.group_ranks(gid)
+    cnt = jnp.zeros((T * NB + 1,), I32).at[gid].add(1)[:-1].reshape(T, NB)
+
+    # carry recurrence around the bucket ring: o' = max(0, cnt - SL + min(o, SL)).
+    # Two laps resolve the cyclic wrap; a non-converged carry only leaves
+    # alloc-bitmap holes / extra stash spill — never a wrong placement.
+    if spill:
+        def lap(o0):
+            def step(o, c):
+                return jnp.maximum(0, c - SL + jnp.minimum(o, SL)), o
+            return jax.lax.scan(step, o0, cnt.T)
+        o_wrap, _ = lap(jnp.zeros((T,), I32))
+        _, o_in = lap(o_wrap)
+        s_in = jnp.minimum(o_in.T, SL)          # (T, NB) spill-in allotment
+    else:
+        s_in = jnp.zeros((T, NB), I32)
+    h = jnp.minimum(cnt, SL - s_in)             # home placements per bucket
+
+    pb = (b + 1) & (NB - 1)
+    h_b = h[tgt_c, b]
+    in_home = valid & (r < h_b)
+    if spill:
+        in_spill = valid & ~in_home & (r - h_b < s_in[tgt_c, pb])
+    else:
+        in_spill = jnp.zeros_like(valid)
+    # home records sit after the spill-in block: slots [s_in[b], s_in[b]+h[b])
+    dst_b = jnp.where(in_home, b, pb)
+    dst_s = jnp.where(in_home, s_in[tgt_c, b] + r, r - h_b)
+    placed = in_home | in_spill
+
+    rest = valid & ~placed
+    if NS > 0:
+        sgid = jnp.where(rest, tgt_c, T)
+        sr = ops.group_ranks(sgid)
+        in_stash = rest & (sr < NS * SL)
+        dst_b = jnp.where(in_stash, NB + sr // SL, dst_b)
+        dst_s = jnp.where(in_stash, sr % SL, dst_s)
+        placed = placed | in_stash
+        stash_tot = jnp.zeros((T + 1,), I32).at[sgid].add(1)[:-1]
+    else:
+        in_stash = jnp.zeros_like(valid)
+        sr = jnp.zeros_like(r)
+        stash_tot = jnp.zeros((T,), I32)
+    ok = ~jnp.any(valid & ~placed)
+
+    # ---- scatter the record planes -----------------------------------------
+    dst_su = jnp.clip(dst_s, 0, SL - 1).astype(U32)
+    flat = jnp.where(placed, (tgt_c * BT + dst_b) * SL + dst_s, T * BT * SL)
+
+    def scat(x, dtype):
+        buf = jnp.zeros((T * BT * SL + 1,), dtype).at[flat].set(x.astype(dtype))
+        return buf[:-1].reshape(T, BT, SL)
+
+    p_hi, p_lo, p_val = scat(hi, U32), scat(lo, U32), scat(val, U32)
+    p_fp = jnp.zeros((T, BT, 16), jnp.uint8).at[:, :, :SL].set(
+        scat(fpv, jnp.uint8))
+
+    bgid = jnp.where(placed, tgt_c * BT + dst_b, T * BT)
+    slot_bit = U32(1) << dst_su
+    alloc = jnp.zeros((T * BT + 1,), U32).at[bgid].add(slot_bit)[:-1]
+    member = in_spill if cfg.use_balanced else jnp.zeros_like(in_spill)
+    memb = jnp.zeros((T * BT + 1,), U32).at[
+        jnp.where(member, bgid, T * BT)].add(slot_bit)[:-1]
+    count = jnp.zeros((T * BT + 1,), U32).at[bgid].add(U32(1))[:-1]
+    p_meta = layout.meta_pack(alloc, memb, count).reshape(T, BT)
+
+    # ---- overflow metadata (Sec. 4.3): home-bucket ofp slots first, the
+    # remainder is carried by the overflow counter (search's scan-all path)
+    if NS > 0 and cfg.num_ofp > 0 and cfg.use_overflow_meta:
+        ogid = jnp.where(in_stash, tgt_c * NB + b, T * NB)
+        orank = ops.group_ranks(ogid)
+        ocnt = jnp.zeros((T * NB + 1,), I32).at[ogid].add(1)[:-1].reshape(T, NB)
+        in_ofp = in_stash & (orank < cfg.num_ofp)
+        oidx = jnp.where(in_ofp, (tgt_c * NB + b) * 4 + orank, T * NB * 4)
+        p_ofp = jnp.zeros((T * NB * 4 + 1,), jnp.uint8).at[oidx].set(
+            fpv.astype(jnp.uint8))[:-1].reshape(T, NB, 4)
+        n_used = jnp.minimum(ocnt, cfg.num_ofp).astype(U32)
+        ofp_alloc = (U32(1) << n_used) - U32(1)
+        sidx = (sr // SL).astype(U32) & U32(0x3)
+        shift = (U32(layout.SIDX_SHIFT)
+                 + U32(2) * jnp.clip(orank, 0, 3).astype(U32))
+        sbits = jnp.zeros((T * NB + 1,), U32).at[
+            jnp.where(in_ofp, tgt_c * NB + b, T * NB)].add(sidx << shift)[:-1]
+        extra = jnp.maximum(ocnt - cfg.num_ofp, 0).astype(U32)
+        p_ometa = ((ofp_alloc << layout.OFPA_SHIFT)
+                   | sbits.reshape(T, NB)
+                   | ((extra & U32(0x7F)) << layout.OVFC_SHIFT)
+                   | ((ocnt > 0).astype(U32) << layout.OVFB_SHIFT))
+    else:
+        p_ofp = jnp.zeros((T, cfg.num_buckets, 4), jnp.uint8)
+        p_ometa = jnp.zeros((T, cfg.num_buckets), U32)
+
+    active = jnp.maximum(stash_base, -(-stash_tot // max(SL, 1)))
+    planes = dict(key_hi=p_hi, key_lo=p_lo, val=p_val, fp=p_fp,
+                  meta=p_meta, ometa=p_ometa, ofp=p_ofp)
+    return planes, active, ok
+
+
+def _extract(cfg: DashConfig, state: DashState, segs):
+    """Records of each segment in ``segs`` (K,): (hi, lo, val, valid) with
+    shape (K, BT*SL) — the batched gather twin of engine.segment_records."""
+    sc = jnp.clip(segs, 0, cfg.max_segments - 1)
+    K = segs.shape[0]
+    hi = state.key_hi[sc].reshape(K, -1)
+    lo = state.key_lo[sc].reshape(K, -1)
+    val = state.val[sc].reshape(K, -1)
+    alloc = layout.meta_alloc(state.meta[sc])
+    slot_ids = jnp.arange(cfg.num_slots, dtype=U32)
+    valid = (((alloc[..., None] >> slot_ids) & U32(1)) == 1).reshape(K, -1)
+    return hi, lo, val, valid
+
+
+def _scatter_planes(cfg: DashConfig, state: DashState, dst, planes):
+    """Write rebuilt (M, ...) segment images at segment ids ``dst`` (M,);
+    out-of-range ids (= masked-out SMOs) are dropped."""
+    return state._replace(
+        key_hi=state.key_hi.at[dst].set(planes["key_hi"], mode="drop"),
+        key_lo=state.key_lo.at[dst].set(planes["key_lo"], mode="drop"),
+        val=state.val.at[dst].set(planes["val"], mode="drop"),
+        fp=state.fp.at[dst].set(planes["fp"], mode="drop"),
+        meta=state.meta.at[dst].set(planes["meta"], mode="drop"),
+        ometa=state.ometa.at[dst].set(planes["ometa"], mode="drop"),
+        ofp=state.ofp.at[dst].set(planes["ofp"], mode="drop"),
+        version=state.version.at[dst].add(U32(2), mode="drop"),
+    )
+
+
+# ---------------------------------------------------------------------------
+# bulk EH split (phase 1 + phase 2, K segments per dispatch)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def bulk_split_phase1(cfg: DashConfig, state: DashState, old, new, valid):
+    """Allocate + initialize + link all K new segments in one dispatch
+    (paper Sec. 4.7 step 1, vectorized). ``valid`` masks padding lanes."""
+    S = cfg.max_segments
+    o = jnp.where(valid, old, S)
+    n = jnp.where(valid, new, S)
+    ld = state.local_depth[jnp.clip(old, 0, S - 1)]
+    side_old = state.side_link[jnp.clip(old, 0, S - 1)]
+    return state._replace(
+        seg_state=state.seg_state.at[o].set(SEG_SPLITTING, mode="drop")
+                                 .at[n].set(SEG_NEW, mode="drop"),
+        side_link=state.side_link.at[n].set(side_old, mode="drop")
+                                 .at[o].set(new, mode="drop"),
+        local_depth=state.local_depth.at[o].set(ld + 1, mode="drop")
+                                      .at[n].set(ld + 1, mode="drop"),
+        seg_version=state.seg_version.at[n].set(state.gver, mode="drop"),
+        stash_active=state.stash_active.at[n].set(cfg.num_stash, mode="drop"),
+        watermark=jnp.maximum(state.watermark,
+                              jnp.max(jnp.where(valid, new, -1)) + 1),
+    )
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5), donate_argnums=(1,))
+def bulk_split_phase2(cfg: DashConfig, state: DashState, old, new, valid,
+                      check_unique: bool = False):
+    """Rebuild + single directory publish for K splits. With
+    ``check_unique=True`` (recovery redo) both halves are extracted and
+    deduped first, making the phase idempotent.  Returns (state, ok (K,));
+    a False lane was NOT committed (its source segment is untouched, still
+    SPLITTING — the host falls back to the scan rehash for it)."""
+    S = cfg.max_segments
+    K = old.shape[0]
+    ld_new = state.local_depth[jnp.clip(old, 0, S - 1)]
+
+    hi, lo, val, vmask = _extract(cfg, state, old)
+    if check_unique:
+        hi2, lo2, val2, vmask2 = _extract(cfg, state, new)
+        hi = jnp.concatenate([hi, hi2], axis=1)
+        lo = jnp.concatenate([lo, lo2], axis=1)
+        val = jnp.concatenate([val, val2], axis=1)
+        vmask = jnp.concatenate([vmask, vmask2], axis=1)
+        vmask = jax.vmap(dedupe_records)(hi, lo, vmask)
+
+    h1, h2 = engine.record_hashes(cfg, state, hi, lo)
+    tgt = ((h1 >> (U32(32) - ld_new[:, None].astype(U32))) & U32(1)).astype(I32)
+    b = layout.bucket_index(cfg, h1)
+    fpv = hashing.fingerprint(h2)
+    planes, active, ok = jax.vmap(
+        functools.partial(rebuild_records, cfg, 2, cfg.num_stash)
+    )(hi, lo, val, vmask, fpv, b, tgt)
+
+    commit = valid & ok
+    dst = jnp.where(commit[:, None], jnp.stack([old, new], axis=1), S)
+    dstf = dst.reshape(-1)
+    state = _scatter_planes(
+        cfg, state, dstf,
+        {k: v.reshape((2 * K,) + v.shape[2:]) for k, v in planes.items()})
+
+    # single directory publish: among entries owned by old[k], the half whose
+    # (ld+1)-th MSB is 1 now points at new[k]
+    idx = jnp.arange(cfg.dir_size, dtype=I32)
+    bit = (idx[None, :] >> (cfg.dir_depth_max - ld_new[:, None])) & 1
+    take = (state.dir[None, :] == old[:, None]) & (bit == 1) & commit[:, None]
+    hit = jnp.any(take, axis=0)
+    state = state._replace(dir=jnp.where(
+        hit, new[jnp.argmax(take, axis=0)], state.dir))
+
+    gd = state.global_depth
+    mx = jnp.max(jnp.where(commit, ld_new, 0))
+    state = state._replace(
+        global_depth=jnp.maximum(gd, mx),
+        n_doublings=state.n_doublings + jnp.maximum(mx - gd, 0),
+        n_splits=state.n_splits + jnp.sum(commit.astype(I32)),
+        seg_state=state.seg_state.at[jnp.where(commit, old, S)]
+                                 .set(SEG_NORMAL, mode="drop")
+                                 .at[jnp.where(commit, new, S)]
+                                 .set(SEG_NORMAL, mode="drop"),
+        seg_version=state.seg_version.at[dstf].set(state.gver, mode="drop"),
+        stash_active=state.stash_active.at[dstf].set(
+            active.reshape(-1), mode="drop"),
+    )
+    return state, ok | ~valid
+
+
+def bulk_split(cfg: DashConfig, state: DashState, old_ids, new_ids,
+               check_unique: bool = False, pad_to: int | None = None):
+    """Host convenience: phase 1 + phase 2 for K splits, with scan-rehash
+    fallback for any lane the rebuild could not fit (rare pathological
+    packings; the fallback preserves exact old-path semantics). Returns
+    (state, n_committed)."""
+    from . import dash_eh
+    old_np = np.asarray(old_ids, np.int32).reshape(-1)
+    new_np = np.asarray(new_ids, np.int32).reshape(-1)
+    K = old_np.size
+    pad = (pad_to or engine._pow2_at_least(K, floor=1)) - K
+    old = jnp.asarray(np.concatenate([old_np, np.full(pad, -1, np.int32)]))
+    new = jnp.asarray(np.concatenate([new_np, np.full(pad, -1, np.int32)]))
+    valid = jnp.asarray(np.arange(K + pad) < K)
+    state = bulk_split_phase1(cfg, state, old, new, valid)
+    state, ok = bulk_split_phase2(cfg, state, old, new, valid, check_unique)
+    ok_np = np.asarray(ok)
+    for k in np.nonzero(~ok_np[:K])[0]:
+        state, fit = dash_eh.split_phase2_scan(
+            cfg, state, jnp.asarray(old_np[k], I32),
+            jnp.asarray(new_np[k], I32), check_unique)
+        if not bool(fit):
+            raise AssertionError("split rehash failed to refit records")
+    return state, K
+
+
+# ---------------------------------------------------------------------------
+# bulk LH round expansion (hybrid-expansion stride, Sec. 5.2/5.3)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0, 2), donate_argnums=(1,))
+def bulk_split_next(cfg: DashConfig, state: DashState, R: int):
+    """Split the R segments at Next..Next+R-1 in one dispatch and advance
+    the packed (level, Next) word once — the hybrid-expansion analog of
+    allocating a whole segment-array stride instead of one segment.  The
+    caller guarantees R does not cross a round boundary and the pool holds
+    R new segments.  Returns (state, ok (R,), old_phys (R,))."""
+    S = cfg.max_segments
+    level, nxt = layout.lh_level_next(state.lh_word)
+    round_size = (I32(1 << cfg.lh_base_log2) << level)
+    old_logical = nxt + jnp.arange(R, dtype=I32)
+    new_logical = round_size + old_logical
+    old_phys = state.lh_dir[jnp.clip(old_logical, 0, S - 1)]
+    new_phys = state.watermark + jnp.arange(R, dtype=I32)
+    base = min(cfg.num_stash, cfg.lh_base_stash)
+
+    # advance the packed word FIRST (the atomic publish of Sec. 5.3); the
+    # stash base reset is unconditional, matching split_next_scan — a failed
+    # lane must not keep its elevated stash_active (the scan fallback
+    # re-activates as it rehashes)
+    nxt2 = nxt + R
+    wrap = nxt2 >= round_size
+    state = state._replace(
+        lh_word=layout.lh_pack(level + wrap.astype(I32),
+                               jnp.where(wrap, 0, nxt2)),
+        lh_dir=state.lh_dir.at[new_logical].set(new_phys, mode="drop"),
+        watermark=state.watermark + R,
+        seg_version=state.seg_version.at[new_phys].set(state.gver,
+                                                       mode="drop"),
+        stash_active=state.stash_active.at[old_phys].set(base, mode="drop")
+                                       .at[new_phys].set(base, mode="drop"),
+    )
+
+    hi, lo, val, vmask = _extract(cfg, state, old_phys)
+    h1, h2 = engine.record_hashes(cfg, state, hi, lo)
+    tgt = ((h1 >> (U32(cfg.lh_base_log2) + level.astype(U32)))
+           & U32(1)).astype(I32)
+    b = layout.lh_bucket_index(cfg, h1)
+    fpv = hashing.fingerprint(h2)
+    planes, active, ok = jax.vmap(
+        functools.partial(rebuild_records, cfg, 2, base)
+    )(hi, lo, val, vmask, fpv, b, tgt)
+
+    dst = jnp.where(ok[:, None], jnp.stack([old_phys, new_phys], axis=1), S)
+    dstf = dst.reshape(-1)
+    state = _scatter_planes(
+        cfg, state, dstf,
+        {k: v.reshape((2 * R,) + v.shape[2:]) for k, v in planes.items()})
+    state = state._replace(
+        stash_active=state.stash_active.at[dstf].set(
+            active.reshape(-1), mode="drop"),
+        n_splits=state.n_splits + R,
+    )
+    return state, ok, old_phys
+
+
+# ---------------------------------------------------------------------------
+# bulk buddy merge (shrink SMO of Sec. 4.7)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def bulk_merge(cfg: DashConfig, state: DashState, keep, victim, valid):
+    """Merge K disjoint buddy pairs in one dispatch: both segments' records
+    rebuild into ``keep``, the victim planes are cleared, and all directory
+    updates publish at once.  Returns (state, ok (K,)); a False lane was not
+    committed (host falls back to the scan merge)."""
+    S = cfg.max_segments
+    K = keep.shape[0]
+    hi_a, lo_a, val_a, va = _extract(cfg, state, keep)
+    hi_b, lo_b, val_b, vb = _extract(cfg, state, victim)
+    hi = jnp.concatenate([hi_a, hi_b], axis=1)
+    lo = jnp.concatenate([lo_a, lo_b], axis=1)
+    val = jnp.concatenate([val_a, val_b], axis=1)
+    vmask = jnp.concatenate([va, vb], axis=1)
+
+    h1, h2 = engine.record_hashes(cfg, state, hi, lo)
+    tgt = jnp.zeros_like(h1, dtype=I32)
+    b = layout.bucket_index(cfg, h1)
+    fpv = hashing.fingerprint(h2)
+    planes, active, ok = jax.vmap(
+        functools.partial(rebuild_records, cfg, 1, cfg.num_stash)
+    )(hi, lo, val, vmask, fpv, b, tgt)
+
+    commit = valid & ok
+    dk = jnp.where(commit, keep, S)
+    dv = jnp.where(commit, victim, S)
+    state = _scatter_planes(
+        cfg, state, dk, {k: v[:, 0] for k, v in planes.items()})
+    zero = dict(
+        key_hi=jnp.zeros((K,) + state.key_hi.shape[1:], U32),
+        key_lo=jnp.zeros((K,) + state.key_lo.shape[1:], U32),
+        val=jnp.zeros((K,) + state.val.shape[1:], U32),
+        fp=jnp.zeros((K,) + state.fp.shape[1:], jnp.uint8),
+        meta=jnp.zeros((K,) + state.meta.shape[1:], U32),
+        ometa=jnp.zeros((K,) + state.ometa.shape[1:], U32),
+        ofp=jnp.zeros((K,) + state.ofp.shape[1:], jnp.uint8),
+    )
+    state = _scatter_planes(cfg, state, dv, zero)
+
+    ld = state.local_depth[jnp.clip(keep, 0, S - 1)] - 1
+    side_v = state.side_link[jnp.clip(victim, 0, S - 1)]
+    take = (state.dir[None, :] == victim[:, None]) & commit[:, None]
+    hit = jnp.any(take, axis=0)
+    state = state._replace(
+        dir=jnp.where(hit, keep[jnp.argmax(take, axis=0)], state.dir),
+        local_depth=state.local_depth.at[dk].set(ld, mode="drop"),
+        side_link=state.side_link.at[dk].set(side_v, mode="drop"),
+        seg_state=state.seg_state.at[dv].set(SEG_NORMAL, mode="drop"),
+        stash_active=state.stash_active.at[dk].set(active[:, 0], mode="drop"),
+    )
+    return state, ok | ~valid
+
+
+def segment_record_set(cfg: DashConfig, state: DashState, seg: int):
+    """Sorted (hi, lo, val) tuples of one segment's live records — the SMO
+    engine's logical-equivalence contract (slot layout may differ between
+    the rebuild and the scan reference; the record set must not). Used by
+    the differential tests and the benchmark's pre-timing check."""
+    hi, lo, val, valid = map(
+        np.asarray, engine.segment_records(cfg, state, jnp.asarray(seg)))
+    return sorted(zip(hi[valid], lo[valid], val[valid]))
+
+
+# ---------------------------------------------------------------------------
+# host-side planning: vectorized buddy-pair scan
+# ---------------------------------------------------------------------------
+
+def find_buddy_pairs(cfg: DashConfig, dirv: np.ndarray, depths: np.ndarray):
+    """All mergeable buddy pairs in one vectorized pass over the directory.
+
+    A segment's buddy owns the sibling prefix at the same local depth; under
+    MSB indexing both ranges are adjacent, so one ``np.unique`` over the
+    directory + one gather finds every pair (the old path re-scanned the
+    whole directory per candidate segment). Pairs are naturally disjoint
+    (the buddy relation at equal depth is a pairing). Returns an (M, 2)
+    int array of [seg, buddy] with seg < buddy.
+    """
+    segs, first_idx = np.unique(dirv, return_index=True)
+    ld = depths[segs]
+    shift = cfg.dir_depth_max - ld
+    prefix = first_idx >> shift
+    sib_first = (prefix ^ 1) << shift
+    buddy = dirv[np.clip(sib_first, 0, dirv.size - 1)]
+    good = (ld > 0) & (buddy != segs) & (depths[buddy] == ld)
+    pairs = np.stack([segs[good], buddy[good]], axis=1)
+    pairs = pairs[pairs[:, 0] < pairs[:, 1]]        # dedupe symmetric pairs
+    return pairs

@@ -14,7 +14,7 @@ from typing import Optional
 import numpy as np
 import jax.numpy as jnp
 
-from . import dash_eh, dash_lh, engine, hashing, layout, recovery
+from . import dash_eh, dash_lh, engine, hashing, layout, recovery, smo
 from .layout import (EXISTS, INSERTED, NEED_SPLIT, NOT_FOUND, DashConfig,
                      DashState)
 
@@ -24,14 +24,22 @@ class TableFullError(RuntimeError):
 
 
 class DashTable:
-    """Shared host logic; subclasses define addressing + pressure handling."""
+    """Shared host logic; subclasses define addressing + pressure handling.
+
+    ``smo_mode="bulk"`` (default) routes structural modifications through the
+    device-parallel SMO engine (core/smo.py): all segments pressured in one
+    batch round split in a single dispatch with one directory publish.
+    ``smo_mode="scalar"`` keeps the per-segment reference path (one scan-rehash
+    dispatch per SMO) — the differential baseline."""
 
     mode: str = "eh"
 
-    def __init__(self, cfg: DashConfig, lazy_recovery: bool = True):
+    def __init__(self, cfg: DashConfig, lazy_recovery: bool = True,
+                 smo_mode: str = "bulk"):
         self.cfg = cfg
         self.state: DashState = layout.make_state(cfg, self.mode)
         self.lazy_recovery = lazy_recovery
+        self.smo_mode = smo_mode
         self.recovered_segments = 0   # stat: lazy recoveries performed
         self.free_segments: list = []  # merged-away ids, recycled by splits
 
@@ -140,6 +148,7 @@ class DashTable:
         out = np.full(hi.shape[0], NEED_SPLIT, dtype=np.int32)
         pending = np.arange(hi.shape[0])
         first = True
+        cap_used = None
         for _ in range(max_retries):
             # per-key segments: recomputed each round (splits remap keys),
             # shared by recovery, the batch plan, and the failure hints
@@ -153,6 +162,14 @@ class DashTable:
                 idx = np.concatenate([pending, np.zeros(n - pending.size, np.int64)])
                 valid = jnp.asarray(np.arange(n) < pending.size)
             batching, capacity = self._write_plan(seg, idx.size)
+            if batching == "segment":
+                # sticky lane capacity: splits shrink the per-segment max
+                # every retry round, and each fresh capacity is a fresh jit
+                # trace — reusing the first round's (clamped to the padded
+                # batch) keeps the retry loop on already-compiled code
+                if cap_used is not None and capacity < cap_used:
+                    capacity = min(cap_used, self._pow2(idx.size))
+                cap_used = capacity
             self.state, statuses, activated = engine.insert_batch(
                 self.cfg, self.mode, self.state,
                 jnp.asarray(hi[idx]), jnp.asarray(lo[idx]),
@@ -166,8 +183,12 @@ class DashTable:
                 self._on_pressure(None)   # LH: stash-allocation split trigger
             if not failed.any():
                 return out
-            self._on_pressure(np.unique(seg[failed]))
             pending = pending[failed]
+            # hints recomputed from the CURRENT directory: lazy recovery (or
+            # an LH activation split above) may have republished it since
+            # ``seg`` was computed, and the device routed the batch by the
+            # recovered directory — stale hints would split the wrong segment
+            self._on_pressure(self._touched_segments(hi[pending], lo[pending]))
             first = False
         raise TableFullError("insert retry budget exhausted")
 
@@ -240,17 +261,40 @@ class DashEH(DashTable):
     def _on_pressure(self, seg_hint):
         if seg_hint is None:
             return                      # EH ignores stash-activation signals
-        wm = int(np.asarray(self.state.watermark))
+        segs = [int(s) for s in np.asarray(seg_hint).reshape(-1)]
         depths = np.asarray(self.state.local_depth)
-        for seg in np.asarray(seg_hint).reshape(-1):
-            seg = int(seg)
+        for seg in segs:
+            if depths[seg] >= self.cfg.dir_depth_max:
+                raise TableFullError("directory depth exhausted")
+        if self.smo_mode == "scalar" or not smo.rebuild_eligible(self.cfg):
+            return self._on_pressure_scalar(segs)
+        # bulk: allocate every new id up front, split all pressured segments
+        # in ONE device dispatch (one directory publish, one watermark bump)
+        wm = int(np.asarray(self.state.watermark))
+        new_ids = []
+        for _ in segs:
+            if self.free_segments:
+                new_ids.append(self.free_segments.pop())
+            elif wm < self.cfg.max_segments:
+                new_ids.append(wm)
+                wm += 1
+            else:
+                break
+        if new_ids:
+            self.state, _ = smo.bulk_split(self.cfg, self.state,
+                                           segs[:len(new_ids)], new_ids)
+        if len(new_ids) < len(segs):
+            raise TableFullError("segment pool exhausted")
+
+    def _on_pressure_scalar(self, segs):
+        """Reference path: one scan-rehash SMO dispatch per segment."""
+        wm = int(np.asarray(self.state.watermark))
+        for seg in segs:
             new_id = self.free_segments.pop() if self.free_segments else None
             if new_id is None and wm >= self.cfg.max_segments:
                 raise TableFullError("segment pool exhausted")
-            if depths[seg] >= self.cfg.dir_depth_max:
-                raise TableFullError("directory depth exhausted")
             self.state, ok = dash_eh.split_segment(self.cfg, self.state, seg,
-                                                   new_id)
+                                                   new_id, impl="scan")
             if not bool(ok):
                 raise AssertionError("split rehash failed to refit records")
             wm += 1
@@ -262,29 +306,54 @@ class DashEH(DashTable):
     def shrink(self, target_fill: float = 0.8, max_merges: int = 10**6) -> int:
         """Merge buddy segment pairs while their combined records fit under
         ``target_fill`` of one segment (paper Sec. 4.7: merge on low load
-        factor). Freed ids are recycled by future splits. Returns merges."""
+        factor). Freed ids are recycled by future splits. Returns merges.
+
+        Planning is one vectorized buddy-pair scan + one counts pass per
+        round (not per merge), and the bulk path merges every fitting pair
+        of a round in a single device dispatch; cascading merges (pairs that
+        only become buddies after their neighbors merged) land in the next
+        round."""
         cap = int(self.cfg.seg_capacity * target_fill)
+        use_bulk = self.smo_mode == "bulk" and smo.rebuild_eligible(self.cfg)
         merges = 0
         while merges < max_merges:
             counts = self._segment_counts()
             dirv = np.asarray(self.state.dir)
-            live = [s for s in np.unique(dirv)
-                    if s not in self.free_segments]
-            done = True
-            for seg in sorted(live, key=lambda s: counts[s]):
-                buddy = dash_eh.find_buddy(self.cfg, self.state, int(seg))
-                if buddy is None:
-                    continue
-                if counts[seg] + counts[buddy] <= cap:
-                    self.state, ok = dash_eh.merge_segments(
-                        self.cfg, self.state, int(buddy), int(seg))
-                    assert bool(ok)
-                    self.free_segments.append(int(seg))
-                    merges += 1
-                    done = False
-                    break
-            if done:
+            depths = np.asarray(self.state.local_depth)
+            pairs = smo.find_buddy_pairs(self.cfg, dirv, depths)
+            if pairs.size:
+                pairs = pairs[counts[pairs[:, 0]] + counts[pairs[:, 1]] <= cap]
+            if pairs.size == 0:
                 return merges
+            pairs = pairs[:max_merges - merges]
+            c0, c1 = counts[pairs[:, 0]], counts[pairs[:, 1]]
+            victim = np.where(c0 <= c1, pairs[:, 0], pairs[:, 1])
+            keep = np.where(c0 <= c1, pairs[:, 1], pairs[:, 0])
+            if use_bulk:
+                # fixed-size chunks: every dispatch shares ONE jit trace
+                # (per-round K values would each compile their own)
+                C = 8
+                for j in range(0, pairs.shape[0], C):
+                    kc, vc = keep[j:j + C], victim[j:j + C]
+                    K = kc.size
+                    kj = jnp.asarray(np.concatenate(
+                        [kc, np.full(C - K, -1)]).astype(np.int32))
+                    vj = jnp.asarray(np.concatenate(
+                        [vc, np.full(C - K, -1)]).astype(np.int32))
+                    ok_mask = jnp.asarray(np.arange(C) < K)
+                    self.state, ok = smo.bulk_merge(self.cfg, self.state,
+                                                    kj, vj, ok_mask)
+                    for i in np.nonzero(~np.asarray(ok)[:K])[0]:
+                        self.state, ok1 = dash_eh.merge_segments_scan(
+                            self.cfg, self.state, int(kc[i]), int(vc[i]))
+                        assert bool(ok1)
+            else:
+                for k, v in zip(keep, victim):
+                    self.state, ok1 = dash_eh.merge_segments_scan(
+                        self.cfg, self.state, int(k), int(v))
+                    assert bool(ok1)
+            self.free_segments.extend(int(v) for v in victim)
+            merges += pairs.shape[0]
         return merges
 
     def _segment_counts(self) -> np.ndarray:
@@ -297,18 +366,41 @@ class DashLH(DashTable):
 
     mode = "lh"
 
+    #: bulk expansion stride (paper Sec. 5.2 hybrid expansion: grow by a
+    #: segment-array stride, not one segment — dash_lh.
+    #: hybrid_expansion_directory derives the stride-8 directory accounting)
+    expansion_stride = 8
+
     def _on_pressure(self, seg_hint):
+        cfg = self.cfg
         wm = int(np.asarray(self.state.watermark))
-        if wm >= self.cfg.max_segments:
+        if wm >= cfg.max_segments:
             raise TableFullError("segment pool exhausted")
         word = int(np.asarray(self.state.lh_word))
         level, nxt = word >> 24, word & 0xFFFFFF
-        new_logical = (1 << self.cfg.lh_base_log2) * (1 << level) + nxt
-        if new_logical >= self.cfg.max_segments:
+        round_size = (1 << cfg.lh_base_log2) << level
+        if round_size + nxt >= cfg.max_segments:
             raise TableFullError("lh directory exhausted")
-        self.state, ok = dash_lh.split_next(self.cfg, self.state)
-        if not bool(ok):
-            raise AssertionError("LH split rehash failed to refit records")
+        if self.smo_mode == "scalar" or not smo.rebuild_eligible(cfg):
+            self.state, ok = dash_lh.split_next_scan(cfg, self.state)
+            if not bool(ok):
+                raise AssertionError("LH split rehash failed to refit records")
+            return
+        # bulk stride expansion: split Next..Next+R-1 in one dispatch,
+        # capped at the round boundary and the pool/directory headroom
+        R = max(1, min(self.expansion_stride, round_size - nxt,
+                       cfg.max_segments - wm,
+                       cfg.max_segments - (round_size + nxt)))
+        self.state, ok, old_phys = smo.bulk_split_next(cfg, self.state, R)
+        ok = np.asarray(ok)
+        if not ok.all():
+            old_phys = np.asarray(old_phys)
+            for i in np.nonzero(~ok)[0]:
+                self.state, ok1 = dash_lh.rehash_segment_scan(
+                    cfg, self.state, int(old_phys[i]))
+                if not bool(ok1):
+                    raise AssertionError(
+                        "LH split rehash failed to refit records")
 
     @property
     def active_segments(self) -> int:

@@ -55,12 +55,16 @@ def owner_of(keys_hi, keys_lo, n_shards: int):
     return (h1 >> U32(32 - int(np.log2(n_shards)))).astype(I32)
 
 
-def _local_dispatch(hi, lo, v, n_shards: int, capacity: int):
+def _local_dispatch(hi, lo, v, n_shards: int, capacity: int,
+                    owner_mask=None):
     """Route this device's queries into (n_shards, capacity) buffers via the
     shared MoE-style dispatcher (kernels/ops.py) — the same sort-based
     router the engine uses to group by segment, here grouping by owner
-    shard. Returns buffers + src map (-1 = empty lane) + kept mask."""
+    shard. ``owner_mask=False`` lanes route to owner -1 (dropped). Returns
+    buffers + src map (-1 = empty lane) + kept mask."""
     owner = owner_of(hi, lo, n_shards)
+    if owner_mask is not None:
+        owner = jnp.where(owner_mask, owner, -1)
     (b_hi, b_lo, b_v), b_src, keep = kops.route_lanes(
         owner, (hi, lo, v), n_shards, capacity, (0, 0, 0))
     return b_hi, b_lo, b_v, b_src, keep
@@ -116,10 +120,15 @@ def build_dht_ops(cfg: DashConfig, mesh: Mesh, axes=("data",),
         out_v = out_v.at[safe].max(jnp.where(src >= 0, resp[..., 1].reshape(-1), 0))
         return out_f[None], out_v[None], keep[None]
 
-    def insert_inner(st, hi, lo, v):
-        hi, lo, v = hi[0], lo[0], v[0]
-        b_hi, b_lo, b_v, b_src, keep = _local_dispatch(hi, lo, v, n_shards,
-                                                       capacity)
+    def insert_inner(st, hi, lo, v, valid):
+        hi, lo, v, valid = hi[0], lo[0], v[0], valid[0]
+        # padded lanes (host pads the batch to n_shards*q_local) route to
+        # owner -1: the dispatcher never grants them a lane, so padding can
+        # never insert the zero key (statuses come back DROPPED, trimmed by
+        # the host)
+        b_hi, b_lo, b_v, b_src, keep = _local_dispatch(
+            hi, lo, v, n_shards, capacity,
+            owner_mask=valid)
         valid_lane = (b_src >= 0).astype(U32)
         req = a2a(jnp.stack([b_hi, b_lo, b_v, valid_lane], axis=-1))
         local = jax.tree.map(lambda x: x[0], st)
@@ -145,7 +154,7 @@ def build_dht_ops(cfg: DashConfig, mesh: Mesh, axes=("data",),
         out_specs=(q_spec, q_spec, q_spec), check_rep=False))
     insert_fn = jax.jit(shard_map(
         insert_inner, mesh=mesh,
-        in_specs=(st_spec, q_spec, q_spec, q_spec),
+        in_specs=(st_spec, q_spec, q_spec, q_spec, q_spec),
         out_specs=(st_spec, q_spec, q_spec), check_rep=False),
         donate_argnums=(0,))
     return search_fn, insert_fn, n_shards
@@ -177,23 +186,36 @@ class DistributedDash:
                 keys.size, pad)
 
     def insert(self, keys, vals, max_rounds: int = 8):
+        """Batch insert with shard-local SMO retries. Statuses are aligned
+        with the *input* batch across retry rounds; capacity-DROPPED lanes
+        are retried too (the smaller retry subset routes without overflow)."""
+        keys = np.asarray(keys, np.uint64)
         vals = np.asarray(vals, np.uint32)
+        out = np.full(keys.size, layout.DROPPED, np.int32)
+        pending = np.arange(keys.size)
         for _ in range(max_rounds):
-            hi, lo, n, pad = self._shape_queries(keys)
+            hi, lo, n, pad = self._shape_queries(keys[pending])
             v = jnp.asarray(np.concatenate(
-                [vals, np.zeros(pad, np.uint32)])).reshape(hi.shape)
-            self.state, statuses, keep = self.insert_fn(self.state, hi, lo, v)
+                [vals[pending], np.zeros(pad, np.uint32)])).reshape(hi.shape)
+            valid = jnp.asarray(np.arange(n + pad) < n).reshape(hi.shape)
+            self.state, statuses, keep = self.insert_fn(self.state, hi, lo, v,
+                                                        valid)
             statuses = np.asarray(statuses).reshape(-1)[:n]
+            out[pending] = statuses
             need = statuses == layout.NEED_SPLIT
-            if not need.any():
-                return statuses
-            self._split_for(np.asarray(keys)[need])
-            keys, vals = np.asarray(keys)[need], vals[need]
+            retry = need | (statuses == layout.DROPPED)
+            if not retry.any():
+                return out
+            if need.any():
+                self._split_for(keys[pending[need]])
+            pending = pending[retry]
         raise RuntimeError("dht insert retry budget exhausted")
 
     def _split_for(self, keys):
-        """Shard-local splits on the owners of failed keys (host-driven)."""
-        from repro.core import dash_eh
+        """Shard-local splits on the owners of failed keys (host-driven).
+        All pressured segments of a shard split in ONE bulk SMO dispatch
+        (core/smo.py) — the per-segment split loop is gone."""
+        from repro.core import dash_eh, smo
         hi, lo = hashing.np_split_keys(np.asarray(keys, np.uint64))
         owners = np.asarray(owner_of(jnp.asarray(hi), jnp.asarray(lo),
                                      self.n_shards))
@@ -204,9 +226,19 @@ class DistributedDash:
             mask = owners == shard
             segs = np.unique(np.asarray(sub.dir)[
                 h1[mask] >> np.uint32(32 - self.cfg.dir_depth_max)])
-            for seg in segs:
-                sub, ok = dash_eh.split_segment(self.cfg, sub, int(seg))
-                assert bool(ok)
+            depths = np.asarray(sub.local_depth)
+            if (depths[segs] >= self.cfg.dir_depth_max).any():
+                raise RuntimeError("shard directory depth exhausted")
+            wm = int(np.asarray(sub.watermark))
+            if wm + segs.size > self.cfg.max_segments:
+                raise RuntimeError("shard segment pool exhausted")
+            if smo.rebuild_eligible(self.cfg):
+                sub, _ = smo.bulk_split(self.cfg, sub, segs,
+                                        wm + np.arange(segs.size))
+            else:
+                for seg in segs:
+                    sub, ok = dash_eh.split_segment(self.cfg, sub, int(seg))
+                    assert bool(ok)
             self.state = jax.tree.map(
                 lambda full, s: full.at[shard].set(s), self.state, sub)
 

@@ -45,6 +45,37 @@ def test_dht_8_shards():
     assert "OK items 4000" in out
 
 
+def test_dht_shard_splits_bulk():
+    """Split-heavy DHT workload: small segments force NEED_SPLIT retry
+    rounds, so owners run the bulk shard-local SMO dispatch and the retry
+    batches are padded (regression: padded lanes must never insert the zero
+    key — n_items has to agree with a meta recount)."""
+    out = run_sub("""
+        import numpy as np
+        from repro.core import DashConfig, INSERTED, layout
+        from repro.distributed import DistributedDash
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(2, 4)
+        cfg = DashConfig(max_segments=32, dir_depth_max=8, init_depth=1,
+                         num_buckets=16, num_slots=8)
+        d = DistributedDash(cfg, mesh, axes=("data", "model"), capacity=256)
+        rng = np.random.default_rng(9)
+        keys = np.unique(rng.integers(1, 2**63, 8000, dtype=np.uint64))[:3001]
+        vals = np.arange(3001, dtype=np.uint32) % 1000 + 1
+        st = d.insert(keys, vals)
+        assert (st == INSERTED).all()
+        wm = np.asarray(d.state.watermark)
+        assert wm.max() > 2, wm          # splits actually happened
+        f, v = d.search(keys)
+        assert f.all() and (v == vals).all()
+        meta = np.asarray(d.state.meta)
+        recount = int(((meta >> layout.COUNT_SHIFT) & 0xF).sum())
+        assert d.n_items == 3001 == recount, (d.n_items, recount)
+        print("OK items", d.n_items, "max wm", int(wm.max()))
+    """)
+    assert "OK items 3001" in out
+
+
 def test_elastic_shrink_and_reshard():
     out = run_sub("""
         import jax, numpy as np

@@ -1,0 +1,244 @@
+"""SMO engine differential tests: vectorized rebuild == scan rehash.
+
+The vectorized segment rebuild (core/smo.py) must be *logically* identical
+to the retained per-record scan rehash on every SMO: set-equality of each
+segment's records, identical directory / local-depth / segment statuses /
+lh-word / watermark / item counts. Placement inside a segment is allowed to
+differ (the rebuild is a one-pass EDF schedule, the scan path is
+insert-order greedy + displacement) — Dash's correctness contract is the
+record set per segment, not the slot layout.
+
+Also pins the incremental ``n_items`` accounting (satellite: no whole-table
+recount per SMO) against the full recount, and crash-recovery of a bulk
+multi-segment SMO (redo-with-uniqueness-check, paper Sec. 4.8).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (DashConfig, DashEH, DashLH, EXISTS, dash_eh, dash_lh,
+                        engine, layout, smo)
+from tests._hypothesis_compat import given, settings, st
+from tests.conftest import unique_keys
+
+SMALL = DashConfig(max_segments=32, dir_depth_max=8, init_depth=1)
+
+
+def _copy(state):
+    return jax.tree.map(jnp.copy, state)
+
+
+_recset = smo.segment_record_set   # the engine's logical-equivalence contract
+
+
+def _assert_logical_equal(cfg, sa, sb, n_segs, tag=""):
+    assert (np.asarray(sa.dir) == np.asarray(sb.dir)).all(), tag
+    assert (np.asarray(sa.local_depth) == np.asarray(sb.local_depth)).all(), tag
+    assert (np.asarray(sa.seg_state) == np.asarray(sb.seg_state)).all(), tag
+    assert (np.asarray(sa.stash_active) == np.asarray(sb.stash_active)).all(), tag
+    assert int(sa.n_items) == int(sb.n_items), tag
+    assert int(sa.watermark) == int(sb.watermark), tag
+    for seg in range(n_segs):
+        assert _recset(cfg, sa, seg) == _recset(cfg, sb, seg), (tag, seg)
+
+
+def _grown_eh(rng, n_keys, cfg=SMALL, smo_mode="scalar"):
+    t = DashEH(cfg, smo_mode=smo_mode)
+    keys = unique_keys(rng, n_keys)
+    vals = (np.arange(n_keys) % 2**32).astype(np.uint32)
+    t.insert(keys, vals)
+    return t, keys, vals
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_eh_split_rebuild_matches_scan(seed):
+    """Every live segment: scan split and rebuild split produce the same
+    record sets, directory, depths, statuses and counts."""
+    rng = np.random.default_rng(seed)
+    t, _, _ = _grown_eh(rng, 1500 + int(rng.integers(0, 1500)))
+    base = t.state
+    wm = int(np.asarray(base.watermark))
+    depths = np.asarray(base.local_depth)
+    for seg in np.unique(np.asarray(base.dir)):
+        if depths[seg] >= SMALL.dir_depth_max:
+            continue
+        s_scan, ok1 = dash_eh.split_segment(SMALL, _copy(base), int(seg), wm,
+                                            impl="scan")
+        s_reb, ok2 = dash_eh.split_segment(SMALL, _copy(base), int(seg), wm,
+                                           impl="rebuild")
+        assert bool(ok1) and bool(ok2)
+        _assert_logical_equal(SMALL, s_scan, s_reb, wm + 1, f"seg={seg}")
+        assert int(np.asarray(engine.recount_items(s_reb))) == int(base.n_items)
+
+
+def test_eh_bulk_split_matches_scalar_loop(rng):
+    """K pressured segments in ONE bulk dispatch == K sequential scan SMOs."""
+    t, _, _ = _grown_eh(rng, 4000)
+    base = t.state
+    wm = int(np.asarray(base.watermark))
+    depths = np.asarray(base.local_depth)
+    segs = [int(s) for s in np.unique(np.asarray(base.dir))
+            if depths[s] < SMALL.dir_depth_max][:6]
+    news = list(range(wm, wm + len(segs)))
+    s_sc = _copy(base)
+    for o, n in zip(segs, news):
+        s_sc, ok = dash_eh.split_segment(SMALL, s_sc, o, n, impl="scan")
+        assert bool(ok)
+    s_blk, _ = smo.bulk_split(SMALL, _copy(base), segs, news)
+    _assert_logical_equal(SMALL, s_sc, s_blk, wm + len(segs))
+    assert int(s_sc.global_depth) == int(s_blk.global_depth)
+    assert int(s_sc.n_splits) == int(s_blk.n_splits)
+    assert int(s_sc.n_doublings) == int(s_blk.n_doublings)
+
+
+@given(st.integers(0, 2**31 - 1))
+@settings(max_examples=4, deadline=None)
+def test_lh_split_rebuild_matches_scan(seed):
+    """split_next_scan == bulk_split_next(R=1) on randomized LH fills."""
+    cfg = DashConfig(max_segments=64, num_stash=4, lh_base_log2=2)
+    rng = np.random.default_rng(seed)
+    n = 2000 + int(rng.integers(0, 2000))
+    t = DashLH(cfg, smo_mode="scalar")
+    t.insert(unique_keys(rng, n), (np.arange(n) % 2**32).astype(np.uint32))
+    base = t.state
+    l_sc, ok1 = dash_lh.split_next_scan(cfg, _copy(base))
+    l_rb, ok2, _ = smo.bulk_split_next(cfg, _copy(base), 1)
+    assert bool(ok1) and bool(np.asarray(ok2).all())
+    assert int(l_sc.lh_word) == int(l_rb.lh_word)
+    assert (np.asarray(l_sc.lh_dir) == np.asarray(l_rb.lh_dir)).all()
+    assert (np.asarray(l_sc.stash_active) == np.asarray(l_rb.stash_active)).all()
+    assert int(l_sc.n_items) == int(l_rb.n_items)
+    for seg in range(int(np.asarray(l_rb.watermark))):
+        assert _recset(cfg, l_sc, seg) == _recset(cfg, l_rb, seg), seg
+
+
+def test_merge_rebuild_matches_scan(rng):
+    """Buddy merge: scan vs bulk on every fitting pair of a shrunk table."""
+    t, keys, _ = _grown_eh(rng, 3000)
+    t.delete(keys[300:])
+    base = t.state
+    pairs = smo.find_buddy_pairs(SMALL, np.asarray(base.dir),
+                                 np.asarray(base.local_depth))
+    assert pairs.size > 0
+    wm = int(np.asarray(base.watermark))
+    for victim, keep in pairs:
+        m_sc, ok1 = dash_eh.merge_segments_scan(SMALL, _copy(base),
+                                                int(keep), int(victim))
+        m_rb, ok2 = dash_eh.merge_segments(SMALL, _copy(base),
+                                           int(keep), int(victim))
+        assert bool(ok1) and bool(ok2)
+        _assert_logical_equal(SMALL, m_sc, m_rb, wm, f"pair={victim},{keep}")
+
+
+def test_table_bulk_vs_scalar_smo_logical_equivalence(rng):
+    """Full table flows with each SMO mode agree on every lookup and count
+    (structural history may differ: bulk splits whole pressure sets)."""
+    keys = unique_keys(rng, 5000)
+    vals = np.arange(5000, dtype=np.uint32)
+    t_s = DashEH(SMALL, smo_mode="scalar")
+    t_b = DashEH(SMALL, smo_mode="bulk")
+    for t in (t_s, t_b):
+        t.insert(keys, vals)
+        t.delete(keys[:2000])
+        t.shrink()
+        t.insert(keys[:1000], vals[:1000])
+    assert t_s.n_items == t_b.n_items
+    for t in (t_s, t_b):
+        f, v = t.search(keys)
+        assert (f[:1000]).all() and (v[:1000] == vals[:1000]).all()
+        assert not f[1000:2000].any()
+        assert f[2000:].all() and (v[2000:] == vals[2000:]).all()
+        assert t.n_items == 4000 == int(np.asarray(engine.recount_items(t.state)))
+
+
+def test_n_items_incremental_matches_recount(rng):
+    """Satellite: n_items is maintained from per-segment deltas through
+    splits, merges, deletes and recovery — always equal to a full recount."""
+    t = DashEH(SMALL, smo_mode="bulk")
+    keys = unique_keys(rng, 6000)
+    vals = np.arange(6000, dtype=np.uint32)
+
+    def check(tag):
+        assert t.n_items == int(np.asarray(engine.recount_items(t.state))), tag
+
+    t.insert(keys[:4000], vals[:4000]); check("grow")
+    t.delete(keys[:3500]); check("delete")
+    t.shrink(); check("shrink")
+    t.insert(keys[4000:], vals[4000:]); check("regrow")
+    t.crash(np.random.default_rng(3), n_dups=4)
+    t.restart()
+    t.search(keys)                      # lazy recovery on access
+    check("recovered")
+
+    cfg = DashConfig(max_segments=64, num_stash=4, lh_base_log2=2)
+    tl = DashLH(cfg, smo_mode="bulk")
+    tl.insert(keys[:4000], vals[:4000])
+    tl.delete(keys[:1000])
+    assert tl.n_items == int(np.asarray(engine.recount_items(tl.state)))
+
+
+def test_bulk_split_crash_recovery(rng):
+    """Crash-injected bulk SMO: phase 1 committed for K segments, phase 2
+    lost. Lazy recovery must finish every split via the uniqueness-checked
+    rebuild, preserving all records and the directory invariants."""
+    cfg = SMALL
+    t = DashEH(cfg)
+    keys = unique_keys(rng, 3000)
+    vals = np.arange(3000, dtype=np.uint32)
+    t.insert(keys, vals)
+    wm = int(np.asarray(t.state.watermark))
+    depths = np.asarray(t.state.local_depth)
+    segs = [int(s) for s in np.unique(np.asarray(t.state.dir))
+            if depths[s] < cfg.dir_depth_max][:3]
+    assert len(segs) >= 2
+    news = list(range(wm, wm + len(segs)))
+    t.state = smo.bulk_split_phase1(
+        cfg, t.state, jnp.asarray(segs, jnp.int32),
+        jnp.asarray(news, jnp.int32), jnp.ones(len(segs), jnp.bool_))
+    t.crash(np.random.default_rng(5), lock_frac=0.1, n_dups=5,
+            wipe_overflow=True)
+    t.restart()
+    f, v = t.search(keys)
+    assert f.all() and (v == vals).all()
+    assert (np.asarray(t.state.seg_state) == layout.SEG_NORMAL).all()
+    assert t.n_items == 3000 == int(np.asarray(engine.recount_items(t.state)))
+    s = t.insert(keys[:64], vals[:64])
+    assert (s == EXISTS).all()          # uniqueness survived the redo
+    dirv = np.asarray(t.state.dir)
+    dp = np.asarray(t.state.local_depth)
+    for seg in np.unique(dirv):
+        e = np.where(dirv == seg)[0]
+        assert e.size == 1 << (cfg.dir_depth_max - dp[seg])
+        assert (np.diff(e) == 1).all()
+
+
+def test_find_buddy_pairs_matches_find_buddy(rng):
+    """The vectorized all-pairs scan agrees with the per-segment helper."""
+    t, _, _ = _grown_eh(rng, 4000)
+    dirv = np.asarray(t.state.dir)
+    depths = np.asarray(t.state.local_depth)
+    pairs = {tuple(p) for p in
+             smo.find_buddy_pairs(SMALL, dirv, depths).tolist()}
+    expect = set()
+    for seg in np.unique(dirv):
+        buddy = dash_eh.find_buddy(SMALL, t.state, int(seg))
+        if buddy is not None:
+            expect.add((min(int(seg), buddy), max(int(seg), buddy)))
+    assert pairs == expect
+
+
+def test_scan_fallback_for_wide_probe_configs(rng):
+    """CCEH-style probe-4 ablations are outside the rebuild's window; the
+    dispatchers must keep them on the scan path and stay correct."""
+    cfg = DashConfig(max_segments=32, dir_depth_max=8, num_stash=0,
+                     use_fingerprints=False, use_balanced=False,
+                     use_displacement=False, probe_len=4, num_slots=4)
+    assert not smo.rebuild_eligible(cfg)
+    t = DashEH(cfg, smo_mode="bulk")
+    keys = unique_keys(rng, 1500)
+    vals = np.arange(1500, dtype=np.uint32)
+    t.insert(keys, vals)
+    f, v = t.search(keys)
+    assert f.all() and (v == vals).all()
+    assert t.n_items == int(np.asarray(engine.recount_items(t.state)))
