@@ -1,6 +1,9 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived`` CSV.
 """Benchmark driver: ``PYTHONPATH=src python -m benchmarks.run [--only fig9]``.
 
+Modules that emit a JSON artifact declare ``ARTIFACT``; the runner skips them
+when the artifact is fresh (newer than the module source) unless ``--force``.
+
 Modules map 1:1 to the paper's artifacts:
   fig7   single_op            per-op cost, 4 tables, fixed + var-len keys
   fig8   scalability          shard scaling + mixed workload + DHT
@@ -16,10 +19,14 @@ Modules map 1:1 to the paper's artifacts:
   extra  kernel_probe         Pallas probe path timing (interpret)
   extra  batch_parallel       segment-parallel vs scan engine (+ JSON artifact)
   extra  smo                  bulk vs scalar split/merge SMOs (+ JSON artifact)
+  extra  online_resize        frontend vs stop-the-world p50/p99 during a
+                              split storm (+ JSON artifact)
 """
 from __future__ import annotations
 
 import argparse
+import importlib
+import os
 import sys
 import time
 import traceback
@@ -39,13 +46,43 @@ MODULES = [
     ("kernel", "benchmarks.kernel_probe"),
     ("batchpar", "benchmarks.batch_parallel"),
     ("smo", "benchmarks.smo"),
+    ("resize", "benchmarks.online_resize"),
 ]
+
+
+def _library_mtime() -> float:
+    """Newest source mtime under the repro package — an artifact produced
+    before a library change is stale even if the bench module is untouched
+    (the acceptance asserts must re-run against the new code)."""
+    import repro
+    newest = 0.0
+    for pkg_dir in repro.__path__:       # namespace package: no __file__
+        for root, _, files in os.walk(pkg_dir):
+            for f in files:
+                if f.endswith(".py"):
+                    newest = max(newest,
+                                 os.path.getmtime(os.path.join(root, f)))
+    return newest
+
+
+def artifact_fresh(modname: str) -> bool:
+    """True iff the module declares an ARTIFACT whose file is newer than
+    both the module's own source and the library (re-running would just
+    reproduce it)."""
+    mod = importlib.import_module(modname)
+    artifact = getattr(mod, "ARTIFACT", None)
+    if artifact is None or not os.path.exists(artifact):
+        return False
+    src_mtime = max(os.path.getmtime(mod.__file__), _library_mtime())
+    return os.path.getmtime(artifact) >= src_mtime
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default=None,
                     help="comma-separated tags (fig7,fig9,...)")
+    ap.add_argument("--force", action="store_true",
+                    help="re-run benches even when their JSON artifact is fresh")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
 
@@ -56,6 +93,10 @@ def main() -> None:
             continue
         t0 = time.time()
         try:
+            if not args.force and artifact_fresh(modname):
+                print(f"# {tag} skipped (artifact fresh; --force to re-run)",
+                      flush=True)
+                continue
             mod = __import__(modname, fromlist=["run"])
             for row in mod.run():
                 print(row.csv(), flush=True)

@@ -13,6 +13,12 @@ jitted phases with a crash-recoverable boundary between them:
 Recovery after a crash between (or inside) the phases re-runs phase 2 with
 uniqueness checking — exactly the paper's "redo the rehashing with uniqueness
 check" (Sec. 4.8). Phase 2 is idempotent under that discipline.
+
+The same two-phase boundary is what makes splits *interleavable*: the staged
+pipeline (core/smo.py:BulkSplitTask, pumped one stage per tick by the
+online-resize frontend in serving/frontend.py) dispatches phase 1 and
+phase 2 on separate scheduler ticks while read batches keep serving an
+epoch-pinned snapshot in between.
 """
 from __future__ import annotations
 

@@ -12,7 +12,11 @@ triggered whenever a stash bucket is allocated". Our static-shape analog:
 each segment owns ``num_stash`` preallocated stash buckets of which
 ``stash_active[seg]`` are live; activating one beyond the base emits a split
 signal that the host wrapper turns into ``split_next`` (Sec. 5.3's
-split-by-accessing-thread, serialized here by batch semantics).
+split-by-accessing-thread, serialized here by batch semantics). Under the
+online-resize frontend the same signal plans a deferred stride expansion
+(core/smo.py:BulkSplitNextTask via DashLH.make_smo_task) pumped between
+read batches — the (level, Next) word advance stays the atomic publish
+point readers verify against.
 """
 from __future__ import annotations
 

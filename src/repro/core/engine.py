@@ -670,7 +670,11 @@ def delete_batch(cfg: DashConfig, mode: str, state: DashState,
 
 def update_in_segment(cfg: DashConfig, state: DashState, seg, b, h2,
                       q_hi, q_lo, q_words, v):
-    """Set the payload of an existing key within a known segment."""
+    """Set the payload of an existing key within a known segment. The
+    touched bucket's version word is bumped like every other write: the
+    optimistic snapshot-verify path (Sec. 4.4, serving/) detects stale
+    payloads only through version planes, so a silent in-place update would
+    be invisible to concurrent readers."""
     fpv = hashing.fingerprint(h2)
     window = cfg.probe_window
     status = I32(NOT_FOUND)
@@ -679,14 +683,18 @@ def update_in_segment(cfg: DashConfig, state: DashState, seg, b, h2,
         f, slot, _ = bk.bucket_probe(cfg, state, seg, bw, fpv, q_hi, q_lo, q_words)
         do = f & (status == NOT_FOUND)
         state = state._replace(
-            val=jnp.where(do, state.val.at[seg, bw, slot].set(v), state.val))
+            val=jnp.where(do, state.val.at[seg, bw, slot].set(v), state.val),
+            version=jnp.where(do, state.version.at[seg, bw].add(U32(2)),
+                              state.version))
         status = jnp.where(do, I32(INSERTED), status)
     for s in range(cfg.num_stash):
         sb = cfg.num_buckets + s
         f, slot, _ = bk.bucket_probe(cfg, state, seg, sb, fpv, q_hi, q_lo, q_words)
         do = f & (s < state.stash_active[seg]) & (status == NOT_FOUND)
         state = state._replace(
-            val=jnp.where(do, state.val.at[seg, sb, slot].set(v), state.val))
+            val=jnp.where(do, state.val.at[seg, sb, slot].set(v), state.val),
+            version=jnp.where(do, state.version.at[seg, sb].add(U32(2)),
+                              state.version))
         status = jnp.where(do, I32(INSERTED), status)
     return state, status
 

@@ -1,5 +1,4 @@
-"""Epoch-based reclamation (paper Sec. 4.4): lock-free readers + safe
-segment/state retirement.
+"""Epoch-based reclamation + versioned snapshot registry (paper Sec. 4.4).
 
 Dash readers hold no locks, so a snapshot being read must not be reclaimed
 until every reader that could see it has exited. In our batched adaptation
@@ -7,6 +6,24 @@ the unit of protection is a STATE SNAPSHOT (the functional table version a
 search batch runs against): writers publish new versions; old versions are
 retired into the epoch's limbo list and freed two epochs later — the classic
 3-epoch scheme.
+
+Two layers live here:
+
+``EpochManager``
+    The grace-period core: readers ``pin()`` an epoch around a read critical
+    section; writers ``retire()`` superseded payloads; a payload is reclaimed
+    once no pinned reader can still reference it (2 epochs later).
+
+``SnapshotRegistry``
+    The serving-frontend contract on top: writers ``publish()`` whole table
+    versions (monotonic version ids), readers ``acquire()`` the newest
+    published version under an epoch pin and run against it while writers
+    keep mutating the live state and SMOs publish *next* directory versions.
+    Superseded versions flow into the EpochManager's limbo; reclamation
+    deletes their device buffers (the PM-free analog). A reader that observes
+    changed bucket version planes retries on a newer version — the
+    snapshot-verify-retry path in ``serving/engine.py:snapshot_search`` and
+    ``serving/frontend.py``.
 """
 from __future__ import annotations
 
@@ -54,6 +71,16 @@ class EpochManager:
         """with epochs.pin(): ... — lock-free read critical section."""
         return self._Guard(self)
 
+    @property
+    def active_readers(self) -> int:
+        with self._lock:
+            return sum(self._active.values())
+
+    @property
+    def limbo_size(self) -> int:
+        with self._lock:
+            return sum(len(v) for v in self._limbo.values())
+
     # -- writers -----------------------------------------------------------
 
     def retire(self, obj: Any):
@@ -82,3 +109,99 @@ class EpochManager:
                 for obj in self._limbo.pop(e):
                     self._reclaim(obj)
                     self.reclaimed += 1
+
+
+class Snapshot:
+    """One published table version: an immutable state pytree + the version
+    id it was published under. Readers hold it only inside an epoch pin (or
+    for as long as the frontend batch that acquired it is in flight)."""
+
+    __slots__ = ("version", "state")
+
+    def __init__(self, version: int, state: Any):
+        self.version = version
+        self.state = state
+
+    def __repr__(self):  # pragma: no cover
+        return f"Snapshot(v{self.version})"
+
+
+def delete_buffers(snap: "Snapshot"):
+    """Default reclaimer: free the snapshot's device buffers (PM-free
+    analog). Safe on already-deleted or non-array leaves."""
+    import jax
+    for leaf in jax.tree.leaves(snap.state):
+        try:
+            leaf.delete()
+        except Exception:
+            pass
+
+
+class SnapshotRegistry:
+    """Monotonic published-version chain guarded by an EpochManager.
+
+    ``publish(state)`` installs ``state`` as the newest version and retires
+    the previous one into the epoch limbo (reclaimed — buffers deleted —
+    once no pinned reader can reference it). ``acquire()`` returns the
+    current Snapshot under an epoch pin; use as a context manager:
+
+        with registry.acquire() as snap:
+            found, vals = search_batch(cfg, mode, snap.state, ...)
+
+    The registry never copies: the caller passes a state whose buffers it
+    will not donate afterwards (the frontend copies once per publish since
+    its write path donates the live buffers).
+    """
+
+    def __init__(self, epochs: Optional[EpochManager] = None,
+                 reclaim: Optional[Callable[[Snapshot], None]] = None):
+        self.epochs = epochs or EpochManager(reclaim=reclaim or delete_buffers)
+        self._lock = threading.Lock()
+        self._current: Optional[Snapshot] = None
+        self._next_version = 0
+        self.published = 0
+
+    @property
+    def current(self) -> Optional[Snapshot]:
+        with self._lock:
+            return self._current
+
+    @property
+    def version(self) -> int:
+        with self._lock:
+            return -1 if self._current is None else self._current.version
+
+    def publish(self, state: Any) -> Snapshot:
+        """Install ``state`` as the newest version; retire the old one."""
+        with self._lock:
+            snap = Snapshot(self._next_version, state)
+            self._next_version += 1
+            old, self._current = self._current, snap
+            self.published += 1
+        if old is not None:
+            self.epochs.retire(old)
+        return snap
+
+    class _Acquired:
+        def __init__(self, registry: "SnapshotRegistry"):
+            self.registry = registry
+
+        def __enter__(self) -> Snapshot:
+            self.epoch = self.registry.epochs.enter()
+            snap = self.registry.current
+            assert snap is not None, "acquire() before first publish()"
+            return snap
+
+        def __exit__(self, *exc):
+            self.registry.epochs.exit(self.epoch)
+
+    def acquire(self) -> "_Acquired":
+        """Pin an epoch and yield the newest published Snapshot."""
+        return self._Acquired(self)
+
+    @property
+    def reclaimed(self) -> int:
+        return self.epochs.reclaimed
+
+    def flush(self):
+        self.epochs.flush()

@@ -306,30 +306,115 @@ def bulk_split_phase2(cfg: DashConfig, state: DashState, old, new, valid,
     return state, ok | ~valid
 
 
+class BulkSplitTask:
+    """Staged EH bulk split: PHASE1 -> PHASE2 -> COMMIT, one device dispatch
+    (or host sync) per ``pump`` call.
+
+    Run to completion it is exactly ``bulk_split``; the point of the staging
+    is the *online-resize* frontend (serving/frontend.py): between stages the
+    caller keeps serving read batches against an epoch-pinned snapshot while
+    the split publishes into the next directory version. Only the COMMIT
+    stage blocks on device results (the ok mask -> scan-rehash fallback for
+    infeasible packings; the fallback preserves exact old-path semantics).
+
+    ``shortfall`` records how many pressured segments the caller could not
+    allocate ids for (pool exhausted); the caller raises after commit so the
+    feasible splits still land — same semantics as the inline path.
+    """
+
+    def __init__(self, cfg: DashConfig, old_ids, new_ids,
+                 check_unique: bool = False, pad_to: int | None = None,
+                 shortfall: int = 0):
+        self.cfg = cfg
+        self.old_np = np.asarray(old_ids, np.int32).reshape(-1)
+        self.new_np = np.asarray(new_ids, np.int32).reshape(-1)
+        K = self.old_np.size
+        pad = (pad_to or engine._pow2_at_least(K, floor=1)) - K
+        self.old = jnp.asarray(np.concatenate(
+            [self.old_np, np.full(pad, -1, np.int32)]))
+        self.new = jnp.asarray(np.concatenate(
+            [self.new_np, np.full(pad, -1, np.int32)]))
+        self.valid = jnp.asarray(np.arange(K + pad) < K)
+        self.check_unique = check_unique
+        self.shortfall = shortfall
+        self.n_committed = K
+        self._ok = None
+        self.stage = "phase1"
+
+    def pump(self, state: DashState):
+        """Advance one stage. Returns (state, done)."""
+        from . import dash_eh
+        if self.stage == "phase1":
+            state = bulk_split_phase1(self.cfg, state, self.old, self.new,
+                                      self.valid)
+            self.stage = "phase2"
+            return state, False
+        if self.stage == "phase2":
+            state, self._ok = bulk_split_phase2(
+                self.cfg, state, self.old, self.new, self.valid,
+                self.check_unique)
+            self.stage = "commit"
+            return state, False
+        assert self.stage == "commit"
+        ok_np = np.asarray(self._ok)
+        for k in np.nonzero(~ok_np[:self.old_np.size])[0]:
+            state, fit = dash_eh.split_phase2_scan(
+                self.cfg, state, jnp.asarray(self.old_np[k], I32),
+                jnp.asarray(self.new_np[k], I32), self.check_unique)
+            if not bool(fit):
+                raise AssertionError("split rehash failed to refit records")
+        self.stage = "done"
+        return state, True
+
+
+class BulkSplitNextTask:
+    """Staged LH round expansion: DISPATCH (``bulk_split_next``) -> COMMIT
+    (ok sync + scan-rehash fallbacks) — the ``BulkSplitTask`` analog for the
+    hybrid-expansion stride. ``R`` must respect the round/pool bounds (the
+    table wrapper plans it)."""
+
+    def __init__(self, cfg: DashConfig, R: int):
+        self.cfg = cfg
+        self.R = R
+        self.shortfall = 0
+        self._ok = None
+        self._old_phys = None
+        self.stage = "dispatch"
+
+    def pump(self, state: DashState):
+        from . import dash_lh
+        if self.stage == "dispatch":
+            state, self._ok, self._old_phys = bulk_split_next(
+                self.cfg, state, self.R)
+            self.stage = "commit"
+            return state, False
+        assert self.stage == "commit"
+        ok = np.asarray(self._ok)
+        if not ok.all():
+            old_phys = np.asarray(self._old_phys)
+            for i in np.nonzero(~ok)[0]:
+                state, ok1 = dash_lh.rehash_segment_scan(
+                    self.cfg, state, int(old_phys[i]))
+                if not bool(ok1):
+                    raise AssertionError(
+                        "LH split rehash failed to refit records")
+        self.stage = "done"
+        return state, True
+
+
 def bulk_split(cfg: DashConfig, state: DashState, old_ids, new_ids,
                check_unique: bool = False, pad_to: int | None = None):
     """Host convenience: phase 1 + phase 2 for K splits, with scan-rehash
     fallback for any lane the rebuild could not fit (rare pathological
-    packings; the fallback preserves exact old-path semantics). Returns
+    packings). Pumps a BulkSplitTask to completion inline — the
+    stop-the-world rendering of the staged pipeline. Returns
     (state, n_committed)."""
-    from . import dash_eh
-    old_np = np.asarray(old_ids, np.int32).reshape(-1)
-    new_np = np.asarray(new_ids, np.int32).reshape(-1)
-    K = old_np.size
-    pad = (pad_to or engine._pow2_at_least(K, floor=1)) - K
-    old = jnp.asarray(np.concatenate([old_np, np.full(pad, -1, np.int32)]))
-    new = jnp.asarray(np.concatenate([new_np, np.full(pad, -1, np.int32)]))
-    valid = jnp.asarray(np.arange(K + pad) < K)
-    state = bulk_split_phase1(cfg, state, old, new, valid)
-    state, ok = bulk_split_phase2(cfg, state, old, new, valid, check_unique)
-    ok_np = np.asarray(ok)
-    for k in np.nonzero(~ok_np[:K])[0]:
-        state, fit = dash_eh.split_phase2_scan(
-            cfg, state, jnp.asarray(old_np[k], I32),
-            jnp.asarray(new_np[k], I32), check_unique)
-        if not bool(fit):
-            raise AssertionError("split rehash failed to refit records")
-    return state, K
+    task = BulkSplitTask(cfg, old_ids, new_ids, check_unique=check_unique,
+                         pad_to=pad_to)
+    done = False
+    while not done:
+        state, done = task.pump(state)
+    return state, task.n_committed
 
 
 # ---------------------------------------------------------------------------

@@ -9,6 +9,7 @@ it — amortizing recovery over runtime exactly as the paper does over accesses.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 import numpy as np
@@ -21,6 +22,31 @@ from .layout import (EXISTS, INSERTED, NEED_SPLIT, NOT_FOUND, DashConfig,
 
 class TableFullError(RuntimeError):
     pass
+
+
+@dataclasses.dataclass
+class InsertJob:
+    """Resumable insert batch: the host state of one ``insert`` retry loop,
+    factored out so callers can interleave other work between rounds.
+
+    ``DashTable.insert`` pumps a job to completion inline (stop-the-world
+    splits); the online-resize frontend (serving/frontend.py) runs one
+    ``insert_round`` per scheduler tick and defers the pressured-segment SMO
+    to a staged background task, serving reads from a pinned snapshot in
+    between."""
+    hi: np.ndarray
+    lo: np.ndarray
+    w: Optional[np.ndarray]
+    vals: np.ndarray
+    out: np.ndarray                  # per-input statuses (NEED_SPLIT until done)
+    pending: np.ndarray              # input indices still unplaced
+    first: bool = True               # first round: full batch, lazy recovery
+    cap_used: Optional[int] = None   # sticky lane capacity across retry rounds
+    rounds: int = 0
+
+    @property
+    def done(self) -> bool:
+        return self.pending.size == 0
 
 
 class DashTable:
@@ -140,56 +166,73 @@ class DashTable:
 
     # -- public ops -----------------------------------------------------------
 
-    def insert(self, keys=None, values=None, words=None, max_retries: int = 256):
+    def insert_begin(self, keys=None, values=None, words=None) -> InsertJob:
+        """Start a resumable insert batch (see InsertJob)."""
         hi_j, lo_j, w_j = self._prep(keys, words)
         hi, lo = np.asarray(hi_j), np.asarray(lo_j)
         w = None if w_j is None else np.asarray(w_j)
         vals = np.asarray(values, dtype=np.uint32)
-        out = np.full(hi.shape[0], NEED_SPLIT, dtype=np.int32)
-        pending = np.arange(hi.shape[0])
-        first = True
-        cap_used = None
+        return InsertJob(hi=hi, lo=lo, w=w, vals=vals,
+                         out=np.full(hi.shape[0], NEED_SPLIT, dtype=np.int32),
+                         pending=np.arange(hi.shape[0]))
+
+    def insert_round(self, job: InsertJob) -> bool:
+        """One insert dispatch over the job's pending subset. Updates
+        ``job.out``/``job.pending``; does NOT run SMOs — the caller decides
+        whether to split inline (``insert``) or defer to a background task
+        (the frontend). Returns the LH stash-activation signal."""
+        hi, lo, w, vals, pending = job.hi, job.lo, job.w, job.vals, job.pending
+        # per-key segments: recomputed each round (splits remap keys),
+        # shared by recovery, the batch plan, and the failure hints
+        seg = self._segments_of(hi[pending], lo[pending])
+        if job.first:
+            self._ensure_recovered(seg)
+            idx, valid = pending, None           # full batch, no padding
+        else:
+            # pad retry subsets to pow2 so jit shapes are reused
+            n = self._pow2(pending.size)
+            idx = np.concatenate([pending, np.zeros(n - pending.size, np.int64)])
+            valid = jnp.asarray(np.arange(n) < pending.size)
+        batching, capacity = self._write_plan(seg, idx.size)
+        if batching == "segment":
+            # sticky lane capacity: splits shrink the per-segment max
+            # every retry round, and each fresh capacity is a fresh jit
+            # trace — reusing the first round's (clamped to the padded
+            # batch) keeps the retry loop on already-compiled code
+            if job.cap_used is not None and capacity < job.cap_used:
+                capacity = min(job.cap_used, self._pow2(idx.size))
+            job.cap_used = capacity
+        self.state, statuses, activated = engine.insert_batch(
+            self.cfg, self.mode, self.state,
+            jnp.asarray(hi[idx]), jnp.asarray(lo[idx]),
+            jnp.asarray(vals[idx]),
+            None if w is None else jnp.asarray(w[idx]), valid,
+            batching=batching, capacity=capacity)
+        statuses = np.asarray(statuses)[:pending.size]
+        job.out[pending] = statuses
+        job.pending = pending[statuses == NEED_SPLIT]
+        job.first = False
+        job.rounds += 1
+        return bool(activated)
+
+    def pressure_hints(self, job: InsertJob) -> np.ndarray:
+        """Touched segments of the job's pending keys, computed from the
+        CURRENT directory: lazy recovery (or an LH activation split) may
+        have republished it since the round was routed — stale hints would
+        split the wrong segment."""
+        return self._touched_segments(job.hi[job.pending], job.lo[job.pending])
+
+    def insert(self, keys=None, values=None, words=None, max_retries: int = 256):
+        """Stop-the-world insert: pump the resumable job, splitting inline
+        whenever a round reports pressure (the paper's 'goto retry' loop)."""
+        job = self.insert_begin(keys, values, words)
         for _ in range(max_retries):
-            # per-key segments: recomputed each round (splits remap keys),
-            # shared by recovery, the batch plan, and the failure hints
-            seg = self._segments_of(hi[pending], lo[pending])
-            if first:
-                self._ensure_recovered(seg)
-                idx, valid = pending, None           # full batch, no padding
-            else:
-                # pad retry subsets to pow2 so jit shapes are reused
-                n = self._pow2(pending.size)
-                idx = np.concatenate([pending, np.zeros(n - pending.size, np.int64)])
-                valid = jnp.asarray(np.arange(n) < pending.size)
-            batching, capacity = self._write_plan(seg, idx.size)
-            if batching == "segment":
-                # sticky lane capacity: splits shrink the per-segment max
-                # every retry round, and each fresh capacity is a fresh jit
-                # trace — reusing the first round's (clamped to the padded
-                # batch) keeps the retry loop on already-compiled code
-                if cap_used is not None and capacity < cap_used:
-                    capacity = min(cap_used, self._pow2(idx.size))
-                cap_used = capacity
-            self.state, statuses, activated = engine.insert_batch(
-                self.cfg, self.mode, self.state,
-                jnp.asarray(hi[idx]), jnp.asarray(lo[idx]),
-                jnp.asarray(vals[idx]),
-                None if w is None else jnp.asarray(w[idx]), valid,
-                batching=batching, capacity=capacity)
-            statuses = np.asarray(statuses)[:pending.size]
-            out[pending] = statuses
-            failed = statuses == NEED_SPLIT
-            if bool(activated):
+            activated = self.insert_round(job)
+            if activated:
                 self._on_pressure(None)   # LH: stash-allocation split trigger
-            if not failed.any():
-                return out
-            pending = pending[failed]
-            # hints recomputed from the CURRENT directory: lazy recovery (or
-            # an LH activation split above) may have republished it since
-            # ``seg`` was computed, and the device routed the batch by the
-            # recovered directory — stale hints would split the wrong segment
-            self._on_pressure(self._touched_segments(hi[pending], lo[pending]))
-            first = False
+            if job.done:
+                return job.out
+            self._on_pressure(self.pressure_hints(job))
         raise TableFullError("insert retry budget exhausted")
 
     def search(self, keys=None, words=None):
@@ -252,24 +295,49 @@ class DashTable:
     def _on_pressure(self, seg_hint):
         raise NotImplementedError
 
+    def smo_task_eligible(self) -> bool:
+        """True iff pressure SMOs run through the staged bulk pipeline (the
+        path the online-resize frontend can defer/interleave)."""
+        return self.smo_mode == "bulk" and smo.rebuild_eligible(self.cfg)
+
+    def make_smo_task(self, seg_hint):
+        """Plan a deferred SMO for the pressured segments and return a staged
+        task (``pump(state) -> (state, done)``; see core/smo.py). Returns
+        None when the signal needs no SMO (e.g. EH stash activation).
+        Raises TableFullError exactly like the inline path."""
+        raise NotImplementedError
+
+    def _pump_smo(self, task):
+        """Stop-the-world rendering of a staged SMO task: run every stage
+        inline, then surface a planning shortfall as pool exhaustion (the
+        feasible splits still landed first, same as the old inline path)."""
+        done = False
+        while not done:
+            self.state, done = task.pump(self.state)
+        if task.shortfall:
+            raise TableFullError("segment pool exhausted")
+
 
 class DashEH(DashTable):
     """Dash extendible hashing (paper Sec. 4)."""
 
     mode = "eh"
 
-    def _on_pressure(self, seg_hint):
-        if seg_hint is None:
-            return                      # EH ignores stash-activation signals
-        segs = [int(s) for s in np.asarray(seg_hint).reshape(-1)]
+    def _check_depth(self, segs):
+        """Shared depth-exhaustion guard of the inline and staged paths."""
         depths = np.asarray(self.state.local_depth)
         for seg in segs:
             if depths[seg] >= self.cfg.dir_depth_max:
                 raise TableFullError("directory depth exhausted")
-        if self.smo_mode == "scalar" or not smo.rebuild_eligible(self.cfg):
-            return self._on_pressure_scalar(segs)
-        # bulk: allocate every new id up front, split all pressured segments
-        # in ONE device dispatch (one directory publish, one watermark bump)
+
+    def make_smo_task(self, seg_hint):
+        """Bulk EH pressure plan: allocate every new id up front (recycled
+        merge victims first, then the pool watermark) so all pressured
+        segments split in one staged pipeline with one directory publish."""
+        if seg_hint is None:
+            return None                 # EH ignores stash-activation signals
+        segs = [int(s) for s in np.asarray(seg_hint).reshape(-1)]
+        self._check_depth(segs)
         wm = int(np.asarray(self.state.watermark))
         new_ids = []
         for _ in segs:
@@ -280,11 +348,21 @@ class DashEH(DashTable):
                 wm += 1
             else:
                 break
-        if new_ids:
-            self.state, _ = smo.bulk_split(self.cfg, self.state,
-                                           segs[:len(new_ids)], new_ids)
-        if len(new_ids) < len(segs):
+        if not new_ids:
             raise TableFullError("segment pool exhausted")
+        return smo.BulkSplitTask(self.cfg, segs[:len(new_ids)], new_ids,
+                                 shortfall=len(segs) - len(new_ids))
+
+    def _on_pressure(self, seg_hint):
+        if seg_hint is None:
+            return                      # EH ignores stash-activation signals
+        if not self.smo_task_eligible():
+            segs = [int(s) for s in np.asarray(seg_hint).reshape(-1)]
+            self._check_depth(segs)
+            return self._on_pressure_scalar(segs)
+        task = self.make_smo_task(seg_hint)
+        if task is not None:
+            self._pump_smo(task)
 
     def _on_pressure_scalar(self, segs):
         """Reference path: one scan-rehash SMO dispatch per segment."""
@@ -371,7 +449,9 @@ class DashLH(DashTable):
     #: hybrid_expansion_directory derives the stride-8 directory accounting)
     expansion_stride = 8
 
-    def _on_pressure(self, seg_hint):
+    def _check_headroom(self):
+        """(level, nxt, round_size) after the pool/round bound checks the
+        inline and deferred paths share."""
         cfg = self.cfg
         wm = int(np.asarray(self.state.watermark))
         if wm >= cfg.max_segments:
@@ -381,26 +461,28 @@ class DashLH(DashTable):
         round_size = (1 << cfg.lh_base_log2) << level
         if round_size + nxt >= cfg.max_segments:
             raise TableFullError("lh directory exhausted")
-        if self.smo_mode == "scalar" or not smo.rebuild_eligible(cfg):
-            self.state, ok = dash_lh.split_next_scan(cfg, self.state)
-            if not bool(ok):
-                raise AssertionError("LH split rehash failed to refit records")
-            return
-        # bulk stride expansion: split Next..Next+R-1 in one dispatch,
-        # capped at the round boundary and the pool/directory headroom
+        return wm, nxt, round_size
+
+    def make_smo_task(self, seg_hint=None):
+        """Bulk stride expansion plan: split Next..Next+R-1 in one staged
+        dispatch, capped at the round boundary and the pool/directory
+        headroom. LH pressure ignores the segment hint (it always splits at
+        Next, Sec. 5.3)."""
+        cfg = self.cfg
+        wm, nxt, round_size = self._check_headroom()
         R = max(1, min(self.expansion_stride, round_size - nxt,
                        cfg.max_segments - wm,
                        cfg.max_segments - (round_size + nxt)))
-        self.state, ok, old_phys = smo.bulk_split_next(cfg, self.state, R)
-        ok = np.asarray(ok)
-        if not ok.all():
-            old_phys = np.asarray(old_phys)
-            for i in np.nonzero(~ok)[0]:
-                self.state, ok1 = dash_lh.rehash_segment_scan(
-                    cfg, self.state, int(old_phys[i]))
-                if not bool(ok1):
-                    raise AssertionError(
-                        "LH split rehash failed to refit records")
+        return smo.BulkSplitNextTask(cfg, R)
+
+    def _on_pressure(self, seg_hint):
+        if not self.smo_task_eligible():
+            self._check_headroom()
+            self.state, ok = dash_lh.split_next_scan(self.cfg, self.state)
+            if not bool(ok):
+                raise AssertionError("LH split rehash failed to refit records")
+            return
+        self._pump_smo(self.make_smo_task(seg_hint))
 
     @property
     def active_segments(self) -> int:

@@ -1,4 +1,6 @@
 """Distributed Dash (shard_map all_to_all routed hash table)."""
-from .dht import DistributedDash, build_dht_ops, make_sharded_state, owner_of
+from .dht import (DistributedDash, ShardFrontend, build_dht_ops,
+                  make_sharded_state, owner_of)
 
-__all__ = ["DistributedDash", "build_dht_ops", "make_sharded_state", "owner_of"]
+__all__ = ["DistributedDash", "ShardFrontend", "build_dht_ops",
+           "make_sharded_state", "owner_of"]

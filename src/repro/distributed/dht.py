@@ -30,6 +30,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.core import DashConfig, engine, hashing, layout
 from repro.core.layout import DashState
 from repro.kernels import ops as kops
+from repro.serving import frontend
 
 I32 = jnp.int32
 U32 = jnp.uint32
@@ -185,6 +186,21 @@ class DistributedDash:
         return (jnp.asarray(hi).reshape(shape), jnp.asarray(lo).reshape(shape),
                 keys.size, pad)
 
+    def insert_once(self, keys, vals):
+        """ONE sharded insert dispatch — no SMOs, no retries. Returns the
+        per-key statuses; NEED_SPLIT/DROPPED lanes are the caller's to
+        retry (``insert`` loops inline; the shard frontend defers the
+        owner splits to their own scheduler ticks)."""
+        keys = np.asarray(keys, np.uint64)
+        vals = np.asarray(vals, np.uint32)
+        hi, lo, n, pad = self._shape_queries(keys)
+        v = jnp.asarray(np.concatenate(
+            [vals, np.zeros(pad, np.uint32)])).reshape(hi.shape)
+        valid = jnp.asarray(np.arange(n + pad) < n).reshape(hi.shape)
+        self.state, statuses, keep = self.insert_fn(self.state, hi, lo, v,
+                                                    valid)
+        return np.asarray(statuses).reshape(-1)[:n]
+
     def insert(self, keys, vals, max_rounds: int = 8):
         """Batch insert with shard-local SMO retries. Statuses are aligned
         with the *input* batch across retry rounds; capacity-DROPPED lanes
@@ -194,24 +210,18 @@ class DistributedDash:
         out = np.full(keys.size, layout.DROPPED, np.int32)
         pending = np.arange(keys.size)
         for _ in range(max_rounds):
-            hi, lo, n, pad = self._shape_queries(keys[pending])
-            v = jnp.asarray(np.concatenate(
-                [vals[pending], np.zeros(pad, np.uint32)])).reshape(hi.shape)
-            valid = jnp.asarray(np.arange(n + pad) < n).reshape(hi.shape)
-            self.state, statuses, keep = self.insert_fn(self.state, hi, lo, v,
-                                                        valid)
-            statuses = np.asarray(statuses).reshape(-1)[:n]
+            statuses = self.insert_once(keys[pending], vals[pending])
             out[pending] = statuses
             need = statuses == layout.NEED_SPLIT
             retry = need | (statuses == layout.DROPPED)
             if not retry.any():
                 return out
             if need.any():
-                self._split_for(keys[pending[need]])
+                self.split_for(keys[pending[need]])
             pending = pending[retry]
         raise RuntimeError("dht insert retry budget exhausted")
 
-    def _split_for(self, keys):
+    def split_for(self, keys):
         """Shard-local splits on the owners of failed keys (host-driven).
         All pressured segments of a shard split in ONE bulk SMO dispatch
         (core/smo.py) — the per-segment split loop is gone."""
@@ -242,11 +252,145 @@ class DistributedDash:
             self.state = jax.tree.map(
                 lambda full, s: full.at[shard].set(s), self.state, sub)
 
-    def search(self, keys):
+    _split_for = split_for            # back-compat alias
+
+    def search_on(self, state, keys):
+        """Search against a caller-supplied sharded state (e.g. an
+        epoch-pinned snapshot); ``search`` is the live-state shorthand.
+        The shard_map'd probe takes any state of the right shapes and
+        never donates it, so snapshots survive the call."""
         hi, lo, n, _ = self._shape_queries(keys)
-        f, v, keep = self.search_fn(self.state, hi, lo)
+        f, v, keep = self.search_fn(state, hi, lo)
         return (np.asarray(f).reshape(-1)[:n], np.asarray(v).reshape(-1)[:n])
+
+    def search(self, keys):
+        return self.search_on(self.state, keys)
 
     @property
     def n_items(self) -> int:
         return int(np.sum(np.asarray(self.state.n_items)))
+
+
+class ShardFrontend(frontend.FrontendBase):
+    """The online-resize frontend (serving/frontend.py) adopted for the
+    device-sharded table: epoch-guarded snapshot reads + deferred shard
+    SMOs over ``DistributedDash``. Admission lanes, batch forming, the
+    read-priority scheduler, and latency/retry accounting come from the
+    shared ``FrontendBase``.
+
+    Read batches pin the newest published snapshot of the *sharded* state
+    and probe it through the unchanged shard_map program; the verify pass
+    compares the owner shard's bucket version planes (host mirror of
+    ``serving.engine.buckets_changed`` — keep the two in lockstep: a
+    contract change there MUST land here too, the shard consistency test
+    guards it) and retries only changed queries on the live state. Write
+    batches run ONE sharded dispatch per tick (``insert_once``); pressured
+    owners' bulk splits (``split_for``) are deferred to their own ticks, so
+    read batches interleave with a shard split storm exactly as in the
+    single-table frontend. Insert + read lanes (the DHT serving surface);
+    updates/deletes stay on the table API.
+    """
+
+    def __init__(self, dht: DistributedDash, *, max_batch: int = 256,
+                 queue_depth: int = 4096):
+        super().__init__(max_batch=max_batch, queue_depth=queue_depth)
+        self.dht = dht
+        self._dirty = True
+        self._publish()
+        self._pending = None          # in-flight insert batch host state
+        self._split_keys = None       # keys whose owners need a bulk split
+
+    def _publish(self):
+        self.registry.publish(jax.tree.map(jnp.copy, self.dht.state))
+        self._dirty = False
+
+    def submit(self, op) -> bool:
+        """Reject kinds outside the DHT serving surface at admission time
+        (an admitted op must never strand mid-drain)."""
+        if op.kind not in (frontend.READ, frontend.INSERT):
+            self.writes.rejected += 1
+            return False
+        return super().submit(op)
+
+    def _write_pending(self) -> bool:
+        return self._pending is not None or self._split_keys is not None
+
+    def _changed_mask(self, snap_state, keys) -> np.ndarray:
+        """Host mirror of serving.engine.buckets_changed over the owner
+        shard's planes (shard count is host-visible; the compare is a few
+        gathers over the copied version planes)."""
+        cfg = self.dht.cfg
+        keys = np.asarray(keys, np.uint64)
+        hi, lo = hashing.np_split_keys(keys)
+        h1 = hashing.np_hash1(hi, lo)
+        owner = (h1 >> np.uint32(32 - int(np.log2(self.dht.n_shards)))
+                 ).astype(np.int64)
+        d = (h1 >> np.uint32(32 - cfg.dir_depth_max)).astype(np.int64)
+        old_dir, new_dir = np.asarray(snap_state.dir), np.asarray(
+            self.dht.state.dir)
+        seg = old_dir[owner, d].astype(np.int64)
+        changed = seg != new_dir[owner, d]
+        oldv = np.asarray(snap_state.version)
+        newv = np.asarray(self.dht.state.version)
+        NB = cfg.num_buckets
+        b = (h1 & np.uint32(NB - 1)).astype(np.int64)
+        for w in range(cfg.probe_window):
+            bw = (b + w) & (NB - 1)
+            changed |= oldv[owner, seg, bw] != newv[owner, seg, bw]
+        for s in range(cfg.num_stash):
+            changed |= oldv[owner, seg, NB + s] != newv[owner, seg, NB + s]
+        return changed
+
+    def _serve_reads(self, ops):
+        keys = np.asarray([op.key for op in ops], np.uint64)
+        with self.registry.acquire() as snap:
+            found, vals = self.dht.search_on(snap.state, keys)
+            n_changed = 0
+            if self._dirty:
+                changed = self._changed_mask(snap.state, keys)
+                n_changed = int(changed.sum())
+            if n_changed:
+                f2, v2 = self.dht.search(keys)
+                found = np.where(changed, f2, found)
+                vals = np.where(changed, v2, vals)
+        self._finish_reads(ops, found, vals, n_changed)
+
+    def _pump_write(self) -> bool:
+        if self._split_keys is not None:
+            # the deferred storm: every pressured owner splits all its
+            # pressured segments in one bulk dispatch
+            self.dht.split_for(self._split_keys)
+            self._split_keys = None
+            self._dirty = True
+            self._publish()
+            return True
+        if self._pending is not None:
+            keys, vals, out, pending, ops, rounds = self._pending
+            if rounds > 32:
+                raise RuntimeError("dht insert retry budget exhausted")
+            statuses = self.dht.insert_once(keys[pending], vals[pending])
+            self._dirty = True
+            out[pending] = statuses
+            need = statuses == layout.NEED_SPLIT
+            retry = need | (statuses == layout.DROPPED)
+            if not retry.any():
+                self._finish_writes(ops, out)
+                self._pending = None
+                self._publish()
+            else:
+                if need.any():
+                    self._split_keys = keys[pending[need]]
+                self._pending = (keys, vals, out, pending[retry], ops,
+                                 rounds + 1)
+            return True
+        ops = self.former.form(self.writes)
+        if not ops:
+            return False
+        assert ops[0].kind == frontend.INSERT, \
+            "shard frontend lanes cover read + insert"
+        keys = np.asarray([op.key for op in ops], np.uint64)
+        vals = np.asarray([op.value for op in ops], np.uint32)
+        self._pending = (keys, vals,
+                         np.full(keys.size, layout.DROPPED, np.int32),
+                         np.arange(keys.size), ops, 0)
+        return self._pump_write()

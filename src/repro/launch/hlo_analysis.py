@@ -25,8 +25,13 @@ _DTYPE_BYTES = {"f32": 4, "bf16": 2, "f16": 2, "s32": 4, "u32": 4, "s8": 1,
 _COMP_HDR = re.compile(r"^(ENTRY )?%?([\w\.\-]+)\s*\(.*\)\s*->")
 _SHAPE_DEF = re.compile(r"%([\w\.\-]+)\s*=\s*\(?(\w+)\[([\d,]*)\]")
 _PARAM_DEF = re.compile(r"%?([\w\.\-]+):\s*(\w+)\[([\d,]*)\]")
+# Two operand spellings exist across XLA versions: bare names
+# ``dot(%a, %b)`` and typed operands ``dot(f32[8,4096]{1,0} %a, ...)``.
+# The optional type group captures the lhs dims inline when present (then no
+# shapes-dict lookup is needed).
 _DOT = re.compile(
-    r"%([\w\.\-]+)\s*=\s*(\w+)\[([\d,]*)\][^=]*dot\(%?([\w\.\-]+), %?([\w\.\-]+)\)"
+    r"%([\w\.\-]+)\s*=\s*(\w+)\[([\d,]*)\][^=]*dot\("
+    r"(?:(\w+)\[([\d,]*)\](?:\{[\d,]*\})?\s+)?%?([\w\.\-]+)"
     r".*?lhs_contracting_dims=\{([\d,]*)\}")
 _COLL = re.compile(
     r"=\s+(.*?)\s+"
@@ -92,13 +97,17 @@ def parse_hlo(text: str):
         dm = _DOT.search(ln)
         if dm:
             out_elems = _shape_elems(dm.group(3))
-            lhs = shapes.get(dm.group(4))
+            if dm.group(5) is not None:            # typed operand: dims inline
+                lhs_dims = tuple(int(d) for d in dm.group(5).split(",") if d)
+            else:
+                lhs = shapes.get(dm.group(6))
+                lhs_dims = lhs[1] if lhs is not None else ()
             contract = 1
-            if lhs is not None and dm.group(6):
-                for ci in dm.group(6).split(","):
+            if dm.group(7):
+                for ci in dm.group(7).split(","):
                     ci = int(ci)
-                    if ci < len(lhs[1]):
-                        contract *= lhs[1][ci]
+                    if ci < len(lhs_dims):
+                        contract *= lhs_dims[ci]
             cur.dots.append(2.0 * out_elems * contract)
         cm = _COLL.search(ln)
         if cm and cm.group(3) != "-done":

@@ -1,7 +1,12 @@
-"""Serving substrate: Dash prefix cache + paged KV pool + batched engine."""
-from . import engine, kv_cache, prefix_cache
-from .engine import Request, ServingEngine, snapshot_search
+"""Serving substrate: Dash prefix cache + paged KV pool + batched engine +
+the online-resize concurrent frontend."""
+from . import engine, frontend, kv_cache, prefix_cache
+from .engine import Request, ServingEngine, buckets_changed, snapshot_search
+from .frontend import (AdmissionQueue, BatchFormer, DashFrontend, Op,
+                       StopTheWorldFrontend)
 from .prefix_cache import BLOCK, DashPrefixCache
 
-__all__ = ["engine", "kv_cache", "prefix_cache", "Request", "ServingEngine",
-           "snapshot_search", "BLOCK", "DashPrefixCache"]
+__all__ = ["engine", "frontend", "kv_cache", "prefix_cache", "Request",
+           "ServingEngine", "snapshot_search", "buckets_changed",
+           "AdmissionQueue", "BatchFormer", "DashFrontend", "Op",
+           "StopTheWorldFrontend", "BLOCK", "DashPrefixCache"]

@@ -18,6 +18,7 @@ tests/benchmarks (Fig. 13 analog).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional
 
 import jax
@@ -134,28 +135,61 @@ class ServingEngine:
 # optimistic snapshot search (system-level Sec. 4.4)
 # ---------------------------------------------------------------------------
 
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def buckets_changed(cfg, mode, old_state, new_state, keys_hi, keys_lo):
+    """Per-query bool mask: could this query observe different records on
+    ``new_state`` than on the ``old_state`` snapshot?
+
+    This is the verify step of the snapshot-verify-retry contract (the
+    serving frontend's default read path): a query is 'changed' iff its
+    addressing moved (directory entry / LH word remap) or any bucket it may
+    probe — the probe window AND the segment's stash buckets, whose version
+    words are the only trace a stash insert leaves for this home bucket —
+    carries a different version word. False negatives would be torn reads;
+    false positives only cost a retry, so the stash compare is segment-wide
+    rather than per-indicated-bucket."""
+    from repro.core import hashing, layout
+    h1 = hashing.hash1(keys_hi, keys_lo)
+    if mode == "eh":
+        d = layout.dir_index(cfg, h1)
+        seg = old_state.dir[d]
+        b = layout.bucket_index(cfg, h1)
+        changed = seg != new_state.dir[d]
+    else:
+        seg = old_state.lh_dir[
+            layout.lh_logical_segment(cfg, h1, old_state.lh_word)]
+        b = layout.lh_bucket_index(cfg, h1)
+        new_seg = new_state.lh_dir[
+            layout.lh_logical_segment(cfg, h1, new_state.lh_word)]
+        changed = seg != new_seg
+    for w in range(cfg.probe_window):
+        bw = (b + w) & (cfg.num_buckets - 1)
+        changed = changed | (old_state.version[seg, bw]
+                             != new_state.version[seg, bw])
+    for s in range(cfg.num_stash):
+        sb = cfg.num_buckets + s
+        changed = changed | (old_state.version[seg, sb]
+                             != new_state.version[seg, sb])
+    return changed
+
+
 def snapshot_search(cfg, old_state, new_state, keys_hi, keys_lo,
-                    batching: str = "auto"):
+                    batching: str = "auto", mode: str = "eh"):
     """Search against a snapshot while writers published ``new_state``;
-    verify per-touched-bucket versions and retry changed queries on the new
-    version. Returns (found, values, n_retried).
+    verify per-touched-bucket versions (``buckets_changed``) and retry
+    changed queries on the new version. Returns (found, values, n_retried).
 
     Both lookups go through ``engine.search_batch``'s default read path —
     the segment-routed Pallas fingerprint kernel on eligible configs — so
     the optimistic snapshot composition rides the fast path too; the
-    version-plane verification below is unchanged (it reads bucket version
-    words, not records)."""
-    found, vals = dash_engine.search_batch(cfg, "eh", old_state, keys_hi,
+    version-plane verification reads bucket version words, not records.
+    The serving frontend uses the lazy two-phase variant (retry dispatched
+    only when the mask is non-empty) via ``buckets_changed`` directly."""
+    found, vals = dash_engine.search_batch(cfg, mode, old_state, keys_hi,
                                            keys_lo, batching=batching)
-    from repro.core import hashing, layout
-    h1 = hashing.hash1(keys_hi, keys_lo)
-    seg = old_state.dir[layout.dir_index(cfg, h1)]
-    b = layout.bucket_index(cfg, h1)
-    pb = (b + 1) & (cfg.num_buckets - 1)
-    changed = ((old_state.version[seg, b] != new_state.version[seg, b]) |
-               (old_state.version[seg, pb] != new_state.version[seg, pb]) |
-               (seg != new_state.dir[layout.dir_index(cfg, h1)]))
-    f2, v2 = dash_engine.search_batch(cfg, "eh", new_state, keys_hi, keys_lo,
+    changed = buckets_changed(cfg, mode, old_state, new_state,
+                              keys_hi, keys_lo)
+    f2, v2 = dash_engine.search_batch(cfg, mode, new_state, keys_hi, keys_lo,
                                       batching=batching)
     found = jnp.where(changed, f2, found)
     vals = jnp.where(changed, v2, vals)

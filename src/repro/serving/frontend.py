@@ -1,0 +1,412 @@
+"""Online-resize serving frontend: epoch-guarded concurrent Dash table.
+
+The stop-the-world path (``DashTable.insert``) holds every queued operation
+hostage while a split storm runs: the host retry loop splits, retries, and
+only then admits the next batch. This frontend serves reads and writes
+*while* bulk SMOs run — the system-level rendering of the paper's claim that
+readers are lock-free against structural modifications (Sec. 4.4, Fig. 13):
+
+  * **Epoch-pinned snapshot reads.** Read batches acquire the newest
+    published table version under an epoch pin (``core/epoch.py:
+    SnapshotRegistry``) and probe it through the default fingerprint read
+    path. A verify pass (``serving/engine.py:buckets_changed``) compares the
+    snapshot's bucket version planes against the live state; only queries
+    whose buckets changed are retried on the live version — the
+    snapshot-verify-retry contract. Every result is therefore either
+    pre-SMO-consistent or post-SMO-consistent; a torn read is impossible
+    because both probes run against immutable functional versions.
+  * **Deferred background SMOs.** A write batch that reports pressure does
+    NOT split inline: the frontend plans a staged bulk-split task
+    (``core/smo.py:BulkSplitTask`` / ``BulkSplitNextTask``) and pumps ONE
+    stage per scheduler tick. Read batches admitted between stages keep
+    serving the pinned snapshot without ever waiting on the split's device
+    work (their inputs carry no data dependency on it — JAX async dispatch
+    free of ``jax.block_until_ready``); the split publishes into the *next*
+    directory version, which readers adopt through verify-retry after the
+    commit stage publishes a fresh snapshot.
+  * **Admission pipeline.** A bounded admission queue feeds two lanes
+    (reads / writes); a batch former pulls maximal same-kind runs from the
+    lane head. Reads may overtake a write stalled behind a resize — that is
+    the point: FIFO holds within a lane, freshness across lanes is governed
+    by the verify pass (acknowledged writes are always visible; in-flight
+    writes surface once acknowledged).
+
+Epoch lifecycle per write batch::
+
+    publish(v_n) ──► reads pin v_n ──► write batch mutates live (donated)
+         ▲                                    │ pressure?
+         │                                    ▼
+    commit stage ◄─ phase2 (next dir) ◄─ phase1 (staged, one stage/tick)
+         │            ... reads keep pinning v_n between stages ...
+         ▼
+    publish(v_n+1) — v_n retired into epoch limbo, reclaimed 2 epochs later
+
+``StopTheWorldFrontend`` drives the identical op stream through the inline
+path (single FIFO, full split storms inside write batches) — the baseline
+``benchmarks/online_resize.py`` measures p50/p99 read latency against.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from collections import deque
+from typing import List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import engine as dash_engine
+from repro.core import hashing
+from repro.core.epoch import SnapshotRegistry
+from repro.core.layout import INSERTED, NOT_FOUND
+from repro.core.table import DashTable, TableFullError
+
+from .engine import buckets_changed
+
+READ, INSERT, UPDATE, DELETE, RMW = "read", "insert", "update", "delete", "rmw"
+
+
+@dataclasses.dataclass
+class Op:
+    """One client operation. The frontend stamps admission/completion times;
+    ``latency`` is the sojourn (queue wait + service), the quantity the
+    online-resize benchmark quotes p50/p99 over."""
+    kind: str
+    key: int
+    value: int = 0
+    enqueue_t: float = 0.0
+    done_t: float = 0.0
+    status: int = -1
+    found: bool = False
+    result: int = 0
+
+    @property
+    def latency(self) -> float:
+        return self.done_t - self.enqueue_t
+
+
+class AdmissionQueue:
+    """Bounded FIFO admission lane. ``offer`` rejects when full — the
+    backpressure is surfaced to the caller (shed/retry upstream) instead of
+    letting the queue grow without bound during a split storm."""
+
+    def __init__(self, depth: int = 4096):
+        self.depth = depth
+        self._q: deque = deque()
+        self.admitted = 0
+        self.rejected = 0
+
+    def offer(self, op: Op) -> bool:
+        if len(self._q) >= self.depth:
+            self.rejected += 1
+            return False
+        op.enqueue_t = time.perf_counter()
+        self._q.append(op)
+        self.admitted += 1
+        return True
+
+    def __len__(self) -> int:
+        return len(self._q)
+
+    def peek(self) -> Optional[Op]:
+        return self._q[0] if self._q else None
+
+    def pop(self) -> Op:
+        return self._q.popleft()
+
+
+class BatchFormer:
+    """Pulls the maximal same-kind run from a lane head, up to
+    ``max_batch`` — admission order is preserved within the lane and every
+    formed batch is homogeneous (one engine dispatch kind)."""
+
+    def __init__(self, max_batch: int = 256):
+        self.max_batch = max_batch
+
+    def form(self, lane: AdmissionQueue) -> List[Op]:
+        head = lane.peek()
+        if head is None:
+            return []
+        ops = []
+        while (len(ops) < self.max_batch and lane.peek() is not None
+               and lane.peek().kind == head.kind):
+            ops.append(lane.pop())
+        return ops
+
+
+def _keys_arrays(ops: List[Op], pad_to: int = 0):
+    """Key planes for a batch, zero-padded to ``pad_to`` so every read
+    batch shares one jit trace (the shape-specialized probe path)."""
+    keys = np.zeros(max(pad_to, len(ops)), dtype=np.uint64)
+    keys[:len(ops)] = [op.key for op in ops]
+    hi, lo = hashing.np_split_keys(keys)
+    return jnp.asarray(hi), jnp.asarray(lo)
+
+
+class FrontendBase:
+    """Shared cooperative scheduler of the single-table and sharded
+    frontends: bounded read/write admission lanes, batch forming,
+    read-priority ticks, sojourn stamping + snapshot/retry stats.
+    Subclasses provide the probe/verify/write machinery (``_serve_reads``,
+    ``_pump_write``) and report in-flight write work via
+    ``_write_pending``."""
+
+    def __init__(self, *, max_batch: int = 256, queue_depth: int = 4096):
+        self.reads = AdmissionQueue(queue_depth)
+        self.writes = AdmissionQueue(queue_depth)
+        self.former = BatchFormer(max_batch)
+        self.registry = SnapshotRegistry()
+        self.snapshot_reads = 0      # queries answered from the snapshot
+        self.retried_reads = 0       # queries re-run on the live version
+        self.read_latencies: List[float] = []
+        self.write_latencies: List[float] = []
+
+    def submit(self, op: Op) -> bool:
+        lane = self.reads if op.kind == READ else self.writes
+        return lane.offer(op)
+
+    def _write_pending(self) -> bool:
+        return False
+
+    @property
+    def busy(self) -> bool:
+        return bool(len(self.reads) or len(self.writes)
+                    or self._write_pending())
+
+    def _finish_reads(self, ops: List[Op], found, vals, n_changed: int):
+        now = time.perf_counter()
+        for i, op in enumerate(ops):
+            op.found = bool(found[i])
+            op.result = int(vals[i])
+            op.status = INSERTED if op.found else NOT_FOUND
+            op.done_t = now
+            self.read_latencies.append(op.latency)
+        self.snapshot_reads += len(ops) - n_changed
+        self.retried_reads += n_changed
+
+    def _finish_writes(self, ops: List[Op], statuses):
+        now = time.perf_counter()
+        for op, st in zip(ops, statuses):
+            op.status = int(st)
+            op.done_t = now
+            self.write_latencies.append(op.latency)
+
+    def step(self) -> bool:
+        """One tick: a read batch first (latency priority — it never waits
+        on the write side), then one write-side unit. Returns True if any
+        work ran."""
+        did = False
+        read_ops = self.former.form(self.reads)
+        if read_ops:
+            self._serve_reads(read_ops)
+            did = True
+        return self._pump_write() or did
+
+    def drain(self):
+        """Run the scheduler until every admitted op completed and no SMO
+        is in flight."""
+        while self.busy:
+            self.step()
+
+
+class DashFrontend(FrontendBase):
+    """Concurrent serving frontend over one ``DashTable`` (EH or LH).
+
+    Cooperative scheduler: ``step()`` is one tick — serve one read batch
+    from the pinned snapshot, then advance the write side by exactly one
+    unit (one SMO stage, one insert round, or one new write batch). The
+    interleaving is deterministic, which is what the no-torn-reads property
+    test schedules against. ``drain()`` runs ticks until idle.
+
+    Requires the staged bulk SMO path (``table.smo_task_eligible()``);
+    scan-mode / rebuild-ineligible tables fall back to inline splits inside
+    the write tick (the frontend still works, reads still serve the
+    snapshot, but a storm then lands inside one tick).
+
+    The frontend assumes it is the table's only writer: the clean-snapshot
+    fast path (skip the verify dispatch when nothing was written since the
+    last publish) is tracked by a host-side dirty flag that direct
+    ``table.insert(...)`` calls would bypass.
+    """
+
+    def __init__(self, table: DashTable, *, max_batch: int = 256,
+                 queue_depth: int = 4096):
+        super().__init__(max_batch=max_batch, queue_depth=queue_depth)
+        self.table = table
+        self.cfg = table.cfg
+        self.mode = table.mode
+        self._dirty = True            # live state diverged from the snapshot
+        self._publish()
+        # in-flight write machinery (at most one of each at a time)
+        self._insert_job = None
+        self._insert_ops: List[Op] = []
+        self._smo_task = None
+        self.smo_stages = 0          # staged SMO pumps
+        self.smo_dispatches = 0      # completed SMO tasks
+
+    def _write_pending(self) -> bool:
+        return self._insert_job is not None or self._smo_task is not None
+
+    # -- snapshot lifecycle ------------------------------------------------
+
+    def _publish(self):
+        """Install the live state as the next published version. The write
+        path donates its buffers, so the snapshot owns a copy; superseded
+        versions retire through the epoch manager (buffers deleted two
+        epochs after the last possible reader)."""
+        self.registry.publish(jax.tree.map(jnp.copy, self.table.state))
+        self._dirty = False
+
+    # -- read lane ---------------------------------------------------------
+
+    def _serve_reads(self, ops: List[Op]):
+        hi, lo = _keys_arrays(ops, pad_to=self.former.max_batch)
+        with self.registry.acquire() as snap:
+            found, vals = dash_engine.search_batch(
+                self.cfg, self.mode, snap.state, hi, lo, batching="auto")
+            found, vals = np.asarray(found).copy(), np.asarray(vals).copy()
+            n_changed = 0
+            if self._dirty:
+                # verify only when the live state diverged since publish
+                # (a clean snapshot is the live state by construction)
+                changed = np.asarray(buckets_changed(
+                    self.cfg, self.mode, snap.state, self.table.state,
+                    hi, lo)).copy()
+                changed[len(ops):] = False        # padding lanes never retry
+                n_changed = int(changed.sum())
+            if n_changed:
+                # lazy retry: one extra dispatch ONLY when the verify pass
+                # flagged queries — this is the only read-path dependency on
+                # in-flight writes/SMOs
+                f2, v2 = dash_engine.search_batch(
+                    self.cfg, self.mode, self.table.state, hi, lo,
+                    batching="auto")
+                found[changed] = np.asarray(f2)[changed]
+                vals[changed] = np.asarray(v2)[changed]
+        self._finish_reads(ops, found, vals, n_changed)
+
+    # -- write lane --------------------------------------------------------
+
+    def _pump_write(self) -> bool:
+        """Advance the write side by one unit. Returns True if work ran."""
+        if self._smo_task is not None:
+            self.table.state, done = self._smo_task.pump(self.table.state)
+            self.smo_stages += 1
+            self._dirty = True
+            if done:
+                shortfall = self._smo_task.shortfall
+                self._smo_task = None
+                self.smo_dispatches += 1
+                # the next directory version is live: publish so subsequent
+                # read batches pin it instead of paying the retry dispatch
+                self._publish()
+                if shortfall:
+                    raise TableFullError("segment pool exhausted")
+            return True
+
+        if self._insert_job is not None:
+            job = self._insert_job
+            if job.rounds > 256:
+                raise TableFullError("insert retry budget exhausted")
+            activated = self.table.insert_round(job)
+            self._dirty = True
+            staged = self.table.smo_task_eligible()
+            if job.done:
+                self._finish_writes(self._insert_ops, job.out)
+                self._insert_job, self._insert_ops = None, []
+                self._publish()
+                if activated:   # LH stash activation still demands a split
+                    if staged:
+                        self._smo_task = self.table.make_smo_task(None)
+                    else:
+                        self.table._on_pressure(None)
+                        self._dirty = True
+            elif staged:
+                # defer the storm: plan the bulk SMO, pump it on later ticks
+                self._smo_task = self.table.make_smo_task(
+                    self.table.pressure_hints(job))
+            else:
+                # scalar / rebuild-ineligible configs keep the inline SMO
+                # (splits land inside this tick; reads still serve snapshots)
+                self.table._on_pressure(self.table.pressure_hints(job))
+            return True
+
+        ops = self.former.form(self.writes)
+        if not ops:
+            return False
+        kind = ops[0].kind
+        if kind == INSERT:
+            self._insert_job = self.table.insert_begin(
+                [op.key for op in ops], [op.value for op in ops])
+            self._insert_ops = ops
+            # first round runs this tick; pressure (if any) defers to a task
+            return self._pump_write()
+        keys = [op.key for op in ops]
+        self._dirty = True
+        if kind == UPDATE:
+            statuses = self.table.update(keys, [op.value for op in ops])
+        elif kind == DELETE:
+            statuses = self.table.delete(keys)
+        else:                                   # RMW: read live, write back
+            found, vals = self.table.search(keys)
+            for op, f, v in zip(ops, found, vals):
+                op.found, op.result = bool(f), int(v)
+            statuses = self.table.update(
+                keys, [op.value for op in ops])
+        self._finish_writes(ops, np.asarray(statuses))
+        self._publish()
+        return True
+
+    def shutdown(self):
+        self.drain()
+        self.registry.flush()
+
+
+class StopTheWorldFrontend(FrontendBase):
+    """Baseline for ``benchmarks/online_resize.py``: the same admission
+    stream served strictly in order through the inline path — ONE FIFO (no
+    lane separation: everything lands in the base's write lane), writes run
+    ``DashTable.insert`` (split storms inside the batch), reads route
+    against the live state. A read admitted behind a storm waits for the
+    whole storm; its sojourn latency shows it."""
+
+    def __init__(self, table: DashTable, *, max_batch: int = 256,
+                 queue_depth: int = 4096):
+        super().__init__(max_batch=max_batch, queue_depth=queue_depth)
+        self.table = table
+        self.cfg = table.cfg
+        self.mode = table.mode
+        self.queue = self.writes          # the single FIFO, reads included
+
+    def submit(self, op: Op) -> bool:
+        return self.queue.offer(op)
+
+    def _serve_reads(self, ops: List[Op]):
+        hi, lo = _keys_arrays(ops, pad_to=self.former.max_batch)
+        found, vals = dash_engine.search_batch(
+            self.cfg, self.mode, self.table.state, hi, lo, batching="auto")
+        self._finish_reads(ops, np.asarray(found), np.asarray(vals), 0)
+
+    def _pump_write(self) -> bool:
+        ops = self.former.form(self.queue)
+        if not ops:
+            return False
+        kind = ops[0].kind
+        if kind == READ:
+            self._serve_reads(ops)
+            return True
+        keys = [op.key for op in ops]
+        if kind == INSERT:
+            statuses = self.table.insert(keys, [op.value for op in ops])
+        elif kind == UPDATE:
+            statuses = self.table.update(keys, [op.value for op in ops])
+        elif kind == DELETE:
+            statuses = self.table.delete(keys)
+        else:                                   # RMW
+            found, vals = self.table.search(keys)
+            for op, f, v in zip(ops, found, vals):
+                op.found, op.result = bool(f), int(v)
+            statuses = self.table.update(keys, [op.value for op in ops])
+        self._finish_writes(ops, np.asarray(statuses))
+        return True
