@@ -20,7 +20,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DashConfig, DashEH, engine, hashing
-from .common import Row, ops_row, time_op, unique_keys
+from .common import (Row, cache_stats, enable_compilation_cache,
+                     ops_row, time_op, unique_keys)
+
+ARTIFACT = "BENCH_batch_parallel.json"
 
 BATCHES = (256, 1024, 4096)
 
@@ -35,6 +38,7 @@ def _assert_identical(sa, sb, tag):
 
 
 def run():
+    enable_compilation_cache()
     cfg = DashConfig(max_segments=64, dir_depth_max=9)
     t = DashEH(cfg)
     rng = np.random.default_rng(0xBA7C)
@@ -101,7 +105,8 @@ def run():
                     extra=f"{t_vmap / t_pall:.2f}x vs vmap"),
         ]
 
-    with open("BENCH_batch_parallel.json", "w") as f:
+    report["compilation_cache"] = cache_stats()
+    with open(ARTIFACT, "w") as f:
         json.dump(report, f, indent=2)
     return rows
 

@@ -83,8 +83,22 @@ def main() -> None:
                     help="comma-separated tags (fig7,fig9,...)")
     ap.add_argument("--force", action="store_true",
                     help="re-run benches even when their JSON artifact is fresh")
+    ap.add_argument("--list", action="store_true",
+                    help="list tags, modules and artifact freshness; run nothing")
     args = ap.parse_args()
     only = set(args.only.split(",")) if args.only else None
+
+    if args.list:
+        print("tag,module,artifact,status")
+        for tag, modname in MODULES:
+            if only and tag not in only:
+                continue
+            mod = importlib.import_module(modname)
+            artifact = getattr(mod, "ARTIFACT", None)
+            status = ("fresh" if artifact_fresh(modname) else "stale") \
+                if artifact else "-"
+            print(f"{tag},{modname},{artifact or '-'},{status}", flush=True)
+        return
 
     print("name,us_per_call,derived")
     failures = []

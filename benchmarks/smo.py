@@ -23,7 +23,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DashConfig, DashEH, TableFullError, dash_eh, engine, smo
-from .common import Row, ops_row, time_op, unique_keys
+from .common import (Row, cache_stats, enable_compilation_cache,
+                     ops_row, time_op, unique_keys)
+
+ARTIFACT = "BENCH_smo.json"
 
 CFG = DashConfig(max_segments=64, dir_depth_max=9)
 N_PRESSURED = 8
@@ -59,6 +62,7 @@ def _fill_to_pool(t, pool, batch=4096):
 
 
 def run():
+    enable_compilation_cache()
     rng = np.random.default_rng(0x5140)
     report = {}
     rows = []
@@ -143,7 +147,8 @@ def run():
             f"{shrink_times['bulk']['merges']} merges"),
     ]
 
-    with open("BENCH_smo.json", "w") as f:
+    report["compilation_cache"] = cache_stats()
+    with open(ARTIFACT, "w") as f:
         json.dump(report, f, indent=2)
     return rows
 

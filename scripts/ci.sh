@@ -1,0 +1,23 @@
+#!/usr/bin/env bash
+# Single-core CI: run every gate SEQUENTIALLY (the container has one core —
+# parallel suites would just thrash each other; see ROADMAP's bench budgets).
+#
+#   1. tier-1 pytest           (the correctness gate; `slow` marks excluded)
+#   2. python -m compileall    (syntax/bytecode sweep over the library)
+#   3. benchmarks/run.py --list (driver + every bench module imports cleanly,
+#                               artifact freshness report; runs nothing)
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== tier-1 pytest =="
+python -m pytest -x -q
+
+echo "== compileall =="
+python -m compileall -q src
+
+echo "== bench registry =="
+python -m benchmarks.run --list
+
+echo "CI OK"

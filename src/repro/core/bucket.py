@@ -7,6 +7,15 @@ in-place updates under donation). Per the paper's persistence discipline
 word* (alloc | membership | count) is published last — the word is the commit
 point, and our crash simulator (recovery.py) is allowed to keep slot writes
 while dropping the word, never the converse.
+
+Version discipline (the optimistic-concurrency analog, Sec. 4.4, and the
+copy-on-write snapshot contract): EVERY mutation of a bucket row — record
+slots, the packed metadata word, overflow fingerprints, the packed overflow
+word — bumps that bucket's version word by 2 (bit 0 stays the lock bit).
+The version plane is therefore a complete change record: the snapshot
+verify pass (serving/engine.py) and the O(dirty) publish
+(core/epoch.py:SnapshotRegistry.publish_cow) both rely on "content changed
+implies version changed"; a silent write would corrupt published snapshots.
 """
 from __future__ import annotations
 
@@ -132,7 +141,12 @@ def read_slot(state: DashState, seg, b, slot):
 
 def ofp_try_set(cfg: DashConfig, state: DashState, seg, b, fpv, stash_idx, member):
     """Try to record an overflow fingerprint on bucket ``b``.
-    Returns (state, ok)."""
+    Returns (state, ok).
+
+    A successful set bumps the bucket's version word: overflow metadata
+    changes what a probe of ``b`` observes, so it must be visible to the
+    version-plane verify pass and to the copy-on-write publish (which
+    scatters exactly the version-changed bucket rows)."""
     if cfg.num_ofp == 0:
         return state, jnp.asarray(False)
     om = state.ometa[seg, b]
@@ -152,17 +166,21 @@ def ofp_try_set(cfg: DashConfig, state: DashState, seg, b, fpv, stash_idx, membe
     st = state._replace(
         ometa=state.ometa.at[seg, b].set(om_out),
         ofp=jnp.where(ok, state.ofp.at[seg, b, slot].set(fpv), state.ofp),
+        version=jnp.where(ok, state.version.at[seg, b].add(U32(2)),
+                          state.version),
     )
     return st, ok
 
 
 def ovf_count_add(state: DashState, seg, b, delta):
-    """Adjust the overflow counter (records in stash with no ofp slot)."""
+    """Adjust the overflow counter (records in stash with no ofp slot).
+    Version-bumped like every metadata write (COW dirtiness contract)."""
     om = state.ometa[seg, b]
     cnt = (layout.ometa_ovf_count(om).astype(jnp.int32) + delta).astype(U32)
     om = (om & ~(U32(0x7F) << layout.OVFC_SHIFT)) | ((cnt & U32(0x7F)) << layout.OVFC_SHIFT)
     om = om | (U32(1) << layout.OVFB_SHIFT)
-    return state._replace(ometa=state.ometa.at[seg, b].set(om))
+    return bump_version(state._replace(ometa=state.ometa.at[seg, b].set(om)),
+                        seg, b)
 
 
 def ofp_matches(cfg: DashConfig, state: DashState, seg, b, fpv, want_member):
@@ -187,4 +205,5 @@ def ofp_clear(cfg: DashConfig, state: DashState, seg, b, slot):
     omem = layout.ometa_ofp_member(om) & ~bit
     om2 = (om & ~((U32(0xF) << layout.OFPA_SHIFT) | (U32(0xF) << layout.OFPM_SHIFT)))
     om2 = om2 | (oa << layout.OFPA_SHIFT) | (omem << layout.OFPM_SHIFT)
-    return state._replace(ometa=state.ometa.at[seg, b].set(om2))
+    return bump_version(state._replace(ometa=state.ometa.at[seg, b].set(om2)),
+                        seg, b)

@@ -205,7 +205,10 @@ def merge_segments_scan(cfg: DashConfig, state: DashState, keep_seg,
         local_depth=state.local_depth.at[keep_seg].set(ld),
         side_link=state.side_link.at[keep_seg].set(state.side_link[victim_seg]),
         seg_state=state.seg_state.at[victim_seg].set(SEG_NORMAL),
-        version=state.version.at[keep_seg].add(U32(2)),
+        # both rebuilt segments bump: the cleared victim planes must be as
+        # version-visible as the repacked keeper (COW dirtiness contract)
+        version=state.version.at[keep_seg].add(U32(2))
+                             .at[victim_seg].add(U32(2)),
         n_items=n0,  # incremental accounting: a merge never changes the count
     )
     return state, jnp.all(fits)

@@ -35,11 +35,16 @@ I32 = jnp.int32
 def _rehash_scan(cfg: DashConfig, state: DashState, seg):
     """Shared scan-rehash body: extract one segment's records, clear it,
     re-insert every record through *current* LH addressing. ``n_items`` is
-    restored (a rehash moves records — net zero). Returns (state, ok)."""
+    restored (a rehash moves records — net zero). Returns (state, ok).
+
+    The whole cleared segment's version rows bump: rows a record moved OUT
+    of change content without a bucket_write, and the copy-on-write publish
+    scatters exactly the version-changed rows."""
     n0 = state.n_items
     hi, lo, val, valid = engine.segment_records(cfg, state, seg)
     h1, h2 = engine.record_hashes(cfg, state, hi, lo)
     state = _clear_segment(cfg, state, seg)
+    state = state._replace(version=state.version.at[seg].add(U32(2)))
 
     def step(st, xs):
         r_hi, r_lo, r_val, r_valid, r_h1, r_h2 = xs

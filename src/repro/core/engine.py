@@ -508,7 +508,12 @@ def insert_batch(cfg: DashConfig, mode: str, state: DashState,
     largest per-segment lane count (the host wrapper sizes it exactly;
     the default ``capacity=None`` -> next pow2 >= batch covers any skew).
     ``valid`` masks out padding lanes (host pads retry subsets to pow2 sizes
-    to avoid shape recompiles)."""
+    to avoid shape recompiles).
+
+    Donation discipline: every mutating dispatch donates (consumes) the live
+    state's buffers, so a published snapshot must OWN its planes — it can
+    alias a previous snapshot's pool-managed buffers (core/epoch.py) but
+    never the live arrays passed here."""
     n = keys_hi.shape[0]
     if words is None:
         words = _dummy_words(cfg, n)
@@ -793,6 +798,26 @@ def recount_items(state: DashState):
     recount is the *audit*: tests assert ``n_items == recount_items`` after
     split/merge/shrink/recovery workloads."""
     return jnp.sum(layout.meta_count(state.meta).astype(I32))
+
+
+@jax.jit
+def changed_rows(prev_version, live_version):
+    """Flattened per-bucket-row dirty mask between two version planes.
+
+    This is the ground truth the copy-on-write publish scatters by
+    (core/epoch.py:SnapshotRegistry.publish_cow): every mutating path —
+    insert/delete/update via the bucket helpers, SMO rebuilds via the
+    whole-segment bump in ``smo._scatter_planes``, recovery via
+    ``recover_segment`` — bumps the version word of every bucket row it
+    touches (see core/bucket.py), so ``prev != live`` at the version plane
+    is a complete O(dirty) change record with zero extra bookkeeping on the
+    write path. The host-side dirty-segment hints (``table.DirtyTracker``,
+    derived from the same routing that feeds ``route_lanes``) are audited
+    against this mask but never replace it.
+
+    Works for any leading shape: (S, BT) for one table, (n_shards, S, BT)
+    for the sharded DHT."""
+    return (prev_version != live_version).reshape(-1)
 
 
 def record_hashes(cfg: DashConfig, state: DashState, hi, lo):

@@ -283,3 +283,35 @@ def load_factor(cfg: DashConfig, state: DashState):
     """records stored / capacity of *allocated* segments (paper's metric)."""
     return state.n_items.astype(jnp.float32) / (
         state.watermark.astype(jnp.float32) * cfg.seg_capacity)
+
+
+# --- copy-on-write plane schema (PR 4) --------------------------------------
+# The state pytree is grouped into individually publishable PLANES. The two
+# record groups are scattered at bucket-row granularity by the COW publish
+# (core/epoch.py:SnapshotRegistry.publish_cow): a row is copied into the next
+# snapshot iff its version word changed (see core/bucket.py's version
+# discipline), everything else is aliased or a cheap whole-copy. The leading
+# axes before the bucket axis are arbitrary — (S, ...) for a single table,
+# (n_shards, S, ...) for the device-sharded DHT — so one publish path serves
+# both frontends.
+
+#: record planes whose bucket axis spans buckets_total (normal + stash rows);
+#: the flattened row index of version[..., b] addresses the same row in all.
+BT_PLANES = ("fp", "key_hi", "key_lo", "val", "meta", "version")
+#: record planes whose bucket axis spans only the num_buckets normal rows
+#: (overflow metadata has no stash rows).
+NB_PLANES = ("ofp", "ometa")
+#: per-segment metadata: tiny, rewritten by SMOs/recovery without per-row
+#: version words — always copied whole at publish.
+SEG_META_PLANES = ("local_depth", "seg_state", "side_link", "seg_version",
+                   "lh_dir", "stash_active")
+#: the fully-expanded directory: aliased across versions until an SMO
+#: publishes a new mapping (device-compared at publish).
+DIR_PLANES = ("dir",)
+
+
+def state_nbytes(state: DashState) -> int:
+    """Total device bytes of one table version — the whole-state copy cost a
+    publish would pay without COW (the benchmark's baseline volume)."""
+    import jax
+    return int(sum(leaf.nbytes for leaf in jax.tree.leaves(state)))

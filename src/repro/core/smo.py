@@ -341,6 +341,13 @@ class BulkSplitTask:
         self._ok = None
         self.stage = "phase1"
 
+    @property
+    def touched(self) -> np.ndarray:
+        """Segment ids this task rebuilds (source + target of every lane) —
+        the dirty-plane footprint the COW publish accounts for (the task
+        also republises the directory)."""
+        return np.concatenate([self.old_np, self.new_np])
+
     def pump(self, state: DashState):
         """Advance one stage. Returns (state, done)."""
         from . import dash_eh
@@ -373,13 +380,18 @@ class BulkSplitNextTask:
     hybrid-expansion stride. ``R`` must respect the round/pool bounds (the
     table wrapper plans it)."""
 
-    def __init__(self, cfg: DashConfig, R: int):
+    def __init__(self, cfg: DashConfig, R: int, touched=None):
         self.cfg = cfg
         self.R = R
         self.shortfall = 0
         self._ok = None
         self._old_phys = None
         self.stage = "dispatch"
+        #: dirty-plane footprint (split sources at Next.. + the new physical
+        #: ids at the watermark); the planner (DashLH.make_smo_task) fills
+        #: it from the host-visible lh_dir/watermark
+        self.touched = np.zeros(0, np.int32) if touched is None \
+            else np.asarray(touched, np.int32).reshape(-1)
 
     def pump(self, state: DashState):
         from . import dash_lh

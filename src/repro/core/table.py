@@ -16,12 +16,54 @@ import numpy as np
 import jax.numpy as jnp
 
 from . import dash_eh, dash_lh, engine, hashing, layout, recovery, smo
+from .epoch import DirtyHint
 from .layout import (EXISTS, INSERTED, NEED_SPLIT, NOT_FOUND, DashConfig,
                      DashState)
 
 
 class TableFullError(RuntimeError):
     pass
+
+
+class DirtyTracker:
+    """Host-side dirty-plane accounting for the copy-on-write publish.
+
+    Every mutating path notes the segments it routed writes to (the same
+    per-key segment ids that feed ``route_lanes``) plus whether the
+    directory changed; the serving frontend drains this at publish time.
+    The version-plane diff is the publish's ground truth — the tracker is
+    the O(1) host mirror used for observability and audited against the
+    device mask (``SnapshotRegistry.hint_misses``). ``note_full`` marks
+    mutations outside the version discipline (crash simulation, restart),
+    forcing the next publish to copy the whole state."""
+
+    def __init__(self):
+        self.segments: set = set()
+        self.dir = False
+        self.full = False
+
+    def note_segments(self, ids):
+        # one vectorized pass: per-key segment arrays arrive on every write
+        # batch, but distinct values are bounded by the pool size
+        ids = np.asarray(ids).reshape(-1)
+        self.segments.update(np.unique(ids[ids >= 0]).tolist())
+
+    def note_dir(self):
+        self.dir = True
+
+    def note_full(self):
+        self.full = True
+
+    @property
+    def any(self) -> bool:
+        return self.full or self.dir or bool(self.segments)
+
+    def drain(self) -> DirtyHint:
+        hint = DirtyHint(self.segments, self.dir, self.full)
+        self.segments = set()
+        self.dir = False
+        self.full = False
+        return hint
 
 
 @dataclasses.dataclass
@@ -68,6 +110,7 @@ class DashTable:
         self.smo_mode = smo_mode
         self.recovered_segments = 0   # stat: lazy recoveries performed
         self.free_segments: list = []  # merged-away ids, recycled by splits
+        self.dirty = DirtyTracker()   # dirty planes since the last publish
 
     # -- key plumbing --------------------------------------------------------
 
@@ -160,6 +203,12 @@ class DashTable:
         seg_ver = np.asarray(self.state.seg_version)
         for seg in np.unique(touched):
             if seg >= 0 and int(seg_ver[seg]) != gver:
+                # recovery may continue an in-flight SMO: the side-linked
+                # neighbor (either direction) and the directory are fair game
+                side = np.asarray(self.state.side_link)
+                self.dirty.note_segments([seg, int(side[seg])])
+                self.dirty.note_segments(np.nonzero(side == seg)[0])
+                self.dirty.note_dir()
                 self.state = recovery.recover_segment_host(
                     self.cfg, self.mode, self.state, int(seg))
                 self.recovered_segments += 1
@@ -185,6 +234,7 @@ class DashTable:
         # per-key segments: recomputed each round (splits remap keys),
         # shared by recovery, the batch plan, and the failure hints
         seg = self._segments_of(hi[pending], lo[pending])
+        self.dirty.note_segments(seg)            # the dispatch writes there
         if job.first:
             self._ensure_recovered(seg)
             idx, valid = pending, None           # full batch, no padding
@@ -249,6 +299,7 @@ class DashTable:
         hi, lo, w = self._prep(keys, words)
         seg = self._segments_of(hi, lo)
         self._ensure_recovered(seg)
+        self.dirty.note_segments(seg)
         batching, capacity = self._write_plan(seg, seg.size)
         self.state, statuses = engine.delete_batch(
             self.cfg, self.mode, self.state, hi, lo, w,
@@ -259,6 +310,7 @@ class DashTable:
         hi, lo, w = self._prep(keys, words)
         seg = self._segments_of(hi, lo)
         self._ensure_recovered(seg)
+        self.dirty.note_segments(seg)
         vals = jnp.asarray(np.asarray(values, dtype=np.uint32))
         batching, capacity = self._write_plan(seg, seg.size)
         self.state, statuses = engine.update_batch(
@@ -274,9 +326,13 @@ class DashTable:
     def restart(self):
         """Instant recovery (Sec. 4.8): O(1) work, constant in data size."""
         self.state, work = recovery.instant_restart(self.state)
+        self.dirty.note_full()   # lazy recovery will rewrite at first touch
         return work
 
     def crash(self, rng: Optional[np.random.Generator] = None, **kw):
+        # crash surgery rewrites planes WITHOUT version bumps — the next
+        # COW publish must not trust the version diff
+        self.dirty.note_full()
         self.state = recovery.simulate_crash(self.cfg, self.mode, self.state,
                                              rng or np.random.default_rng(0), **kw)
 
@@ -311,11 +367,19 @@ class DashTable:
         """Stop-the-world rendering of a staged SMO task: run every stage
         inline, then surface a planning shortfall as pool exhaustion (the
         feasible splits still landed first, same as the old inline path)."""
+        self.note_smo(task)
         done = False
         while not done:
             self.state, done = task.pump(self.state)
         if task.shortfall:
             raise TableFullError("segment pool exhausted")
+
+    def note_smo(self, task):
+        """Record a staged SMO's dirty footprint (rebuilt + directory
+        planes) — callers pumping a task themselves (the online-resize
+        frontend) invoke this once per task."""
+        self.dirty.note_segments(task.touched)
+        self.dirty.note_dir()
 
 
 class DashEH(DashTable):
@@ -371,6 +435,8 @@ class DashEH(DashTable):
             new_id = self.free_segments.pop() if self.free_segments else None
             if new_id is None and wm >= self.cfg.max_segments:
                 raise TableFullError("segment pool exhausted")
+            self.dirty.note_segments([seg, wm if new_id is None else new_id])
+            self.dirty.note_dir()
             self.state, ok = dash_eh.split_segment(self.cfg, self.state, seg,
                                                    new_id, impl="scan")
             if not bool(ok):
@@ -407,6 +473,8 @@ class DashEH(DashTable):
             c0, c1 = counts[pairs[:, 0]], counts[pairs[:, 1]]
             victim = np.where(c0 <= c1, pairs[:, 0], pairs[:, 1])
             keep = np.where(c0 <= c1, pairs[:, 1], pairs[:, 0])
+            self.dirty.note_segments(pairs)
+            self.dirty.note_dir()
             if use_bulk:
                 # fixed-size chunks: every dispatch shares ONE jit trace
                 # (per-round K values would each compile their own)
@@ -473,11 +541,15 @@ class DashLH(DashTable):
         R = max(1, min(self.expansion_stride, round_size - nxt,
                        cfg.max_segments - wm,
                        cfg.max_segments - (round_size + nxt)))
-        return smo.BulkSplitNextTask(cfg, R)
+        old_phys = np.asarray(self.state.lh_dir)[nxt:nxt + R]
+        return smo.BulkSplitNextTask(
+            cfg, R, touched=np.concatenate([old_phys, wm + np.arange(R)]))
 
     def _on_pressure(self, seg_hint):
         if not self.smo_task_eligible():
-            self._check_headroom()
+            wm, nxt, _ = self._check_headroom()
+            self.dirty.note_segments(
+                [int(np.asarray(self.state.lh_dir)[nxt]), wm])
             self.state, ok = dash_lh.split_next_scan(self.cfg, self.state)
             if not bool(ok):
                 raise AssertionError("LH split rehash failed to refit records")

@@ -301,7 +301,12 @@ class ShardFrontend(frontend.FrontendBase):
         self._split_keys = None       # keys whose owners need a bulk split
 
     def _publish(self):
-        self.registry.publish(jax.tree.map(jnp.copy, self.dht.state))
+        """Per-shard copy-on-write publish: the sharded state's planes have
+        a (n_shards, S, ...) leading shape, and the same version-plane diff
+        drives the O(dirty) scatter — an insert burst republises only the
+        bucket rows its owners wrote, a shard split storm only the rebuilt
+        segments (plus each shard's directory when it changed)."""
+        self.registry.publish_cow(self.dht.cfg, self.dht.state)
         self._dirty = False
 
     def submit(self, op) -> bool:

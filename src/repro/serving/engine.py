@@ -147,7 +147,15 @@ def buckets_changed(cfg, mode, old_state, new_state, keys_hi, keys_lo):
     words are the only trace a stash insert leaves for this home bucket —
     carries a different version word. False negatives would be torn reads;
     false positives only cost a retry, so the stash compare is segment-wide
-    rather than per-indicated-bucket."""
+    rather than per-indicated-bucket.
+
+    Copy-on-write versions (core/epoch.py) ALIAS unchanged planes between
+    snapshots; the compare is oblivious to that — aliased planes are
+    ordinary arrays that happen to share buffers, and the version planes it
+    reads are exactly the rows the COW publish keeps current. The frontend
+    skips the whole dispatch when nothing was written since the last
+    publish (its host-side dirty gate), so this only runs against a live
+    state that genuinely diverged."""
     from repro.core import hashing, layout
     h1 = hashing.hash1(keys_hi, keys_lo)
     if mode == "eh":

@@ -15,6 +15,17 @@ readers are lock-free against structural modifications (Sec. 4.4, Fig. 13):
     snapshot-verify-retry contract. Every result is therefore either
     pre-SMO-consistent or post-SMO-consistent; a torn read is impossible
     because both probes run against immutable functional versions.
+  * **O(dirty) copy-on-write publish.** Installing a new version costs
+    bytes proportional to what the write batch actually touched, not to the
+    table size: ``SnapshotRegistry.publish_cow`` scatters exactly the
+    version-changed bucket rows into the previous version's buffers
+    (donated in place when unpinned) and aliases every untouched plane —
+    the directory after a non-SMO batch, the overflow metadata after an
+    update burst, whole record planes after a metadata-only tick.
+    Reclamation is plane-level (refcounted ``PlanePool``): retiring v_n
+    never frees a plane v_n+1 still aliases. ``stats()`` exposes
+    ``publish_bytes`` / ``planes_copied`` / ``planes_aliased`` /
+    ``reclaimed`` for the benchmarks' publish-volume gate.
   * **Deferred background SMOs.** A write batch that reports pressure does
     NOT split inline: the frontend plans a staged bulk-split task
     (``core/smo.py:BulkSplitTask`` / ``BulkSplitNextTask``) and pumps ONE
@@ -52,7 +63,6 @@ import time
 from collections import deque
 from typing import List, Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -174,6 +184,15 @@ class FrontendBase:
         return bool(len(self.reads) or len(self.writes)
                     or self._write_pending())
 
+    def stats(self) -> dict:
+        """One observability surface (benches + tests): the registry's
+        copy-on-write publish counters plus the read-path snapshot/retry
+        split."""
+        out = self.registry.stats()
+        out["snapshot_reads"] = self.snapshot_reads
+        out["retried_reads"] = self.retried_reads
+        return out
+
     def _finish_reads(self, ops: List[Op], found, vals, n_changed: int):
         now = time.perf_counter()
         for i, op in enumerate(ops):
@@ -251,11 +270,16 @@ class DashFrontend(FrontendBase):
     # -- snapshot lifecycle ------------------------------------------------
 
     def _publish(self):
-        """Install the live state as the next published version. The write
-        path donates its buffers, so the snapshot owns a copy; superseded
-        versions retire through the epoch manager (buffers deleted two
-        epochs after the last possible reader)."""
-        self.registry.publish(jax.tree.map(jnp.copy, self.table.state))
+        """Install the live state as the next published version in O(dirty)
+        bytes: the COW publish scatters only version-changed bucket rows and
+        aliases untouched planes (core/epoch.py). The table's host-side
+        dirty tracker is drained alongside (audited against the device
+        ground truth; it also carries the force-full escape after
+        crash/restart). Superseded versions retire through the epoch
+        manager; their planes are freed only when no newer version aliases
+        them."""
+        self.registry.publish_cow(self.cfg, self.table.state,
+                                  dirty_hint=self.table.dirty.drain())
         self._dirty = False
 
     # -- read lane ---------------------------------------------------------
@@ -319,6 +343,8 @@ class DashFrontend(FrontendBase):
                 if activated:   # LH stash activation still demands a split
                     if staged:
                         self._smo_task = self.table.make_smo_task(None)
+                        if self._smo_task is not None:
+                            self.table.note_smo(self._smo_task)
                     else:
                         self.table._on_pressure(None)
                         self._dirty = True
@@ -326,6 +352,7 @@ class DashFrontend(FrontendBase):
                 # defer the storm: plan the bulk SMO, pump it on later ticks
                 self._smo_task = self.table.make_smo_task(
                     self.table.pressure_hints(job))
+                self.table.note_smo(self._smo_task)
             else:
                 # scalar / rebuild-ineligible configs keep the inline SMO
                 # (splits land inside this tick; reads still serve snapshots)

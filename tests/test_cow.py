@@ -1,0 +1,271 @@
+"""Copy-on-write segment-plane snapshots (ISSUE 4): plane aliasing,
+in-place donation, refcounted plane-level reclamation, version-bump
+completeness, and the host dirty-tracker audit.
+
+The contracts under test:
+
+  * a published snapshot is bit-identical to the live state at publish time
+    even though only dirty bucket rows were copied;
+  * unchanged planes are SHARED between consecutive versions (object/buffer
+    identity), and reclaiming an old version never invalidates a plane a
+    newer version (or the live state) still uses;
+  * a pinned version's buffers are never donated away;
+  * every plane mutation bumps its bucket's version word (the COW publish's
+    ground truth) across insert/delete/update/SMO workloads;
+  * the host DirtyTracker reports a superset of the device dirty segments
+    (``hint_misses == 0``).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import DashConfig, DashEH, DashLH, engine as dash_engine
+from repro.core import layout
+from repro.core.epoch import DirtyHint, PlanePool, SnapshotRegistry
+from repro.serving.frontend import (DELETE, INSERT, READ, RMW, UPDATE,
+                                    DashFrontend, Op)
+from repro.workloads import ycsb
+from tests.conftest import unique_keys
+
+CFG = DashConfig(max_segments=32, dir_depth_max=7, num_buckets=16,
+                 num_slots=8)
+
+
+def _assert_state_equal(sa, sb):
+    for name in sa._fields:
+        a, b = np.asarray(getattr(sa, name)), np.asarray(getattr(sb, name))
+        assert (a == b).all(), name
+
+
+def _loaded_table(n=800, cls=DashEH, cfg=CFG, seed=0xC0):
+    t = cls(cfg)
+    keys = unique_keys(np.random.default_rng(seed), n + 400)
+    t.insert(keys[:n], np.arange(n, dtype=np.uint32))
+    return t, keys, n
+
+
+# ---------------------------------------------------------------------------
+# plane pool
+# ---------------------------------------------------------------------------
+
+def test_plane_pool_refcounts():
+    pool = PlanePool()
+    a = jnp.arange(16)
+    pool.incref(a)
+    pool.incref(a)              # second snapshot aliases the same plane
+    assert pool.refcount(a) == 2
+    assert not pool.decref(a)   # first release: still referenced
+    assert not a.is_deleted()
+    assert pool.decref(a)       # last release frees the buffer
+    assert a.is_deleted()
+    assert pool.live_planes == 0
+
+
+# ---------------------------------------------------------------------------
+# COW publish: aliasing + donation + bit-exactness
+# ---------------------------------------------------------------------------
+
+def test_cow_publish_is_bit_exact_and_o_dirty():
+    t, keys, n = _loaded_table()
+    reg = SnapshotRegistry()
+    s0 = reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+    whole = layout.state_nbytes(t.state)
+    assert reg.last_publish_bytes == whole          # first publish: full copy
+
+    t.insert(keys[n:n + 64], np.arange(64, dtype=np.uint32) + n)
+    s1 = reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+    _assert_state_equal(s1.state, t.state)          # snapshot == live
+    assert reg.last_publish_bytes < 0.5 * whole     # O(dirty), not O(table)
+    assert reg.hint_misses == 0
+
+    # a logically-pinnable workload: updates dirty only val+version rows
+    t.update(keys[:32], np.arange(32, dtype=np.uint32) + 7000)
+    s2 = reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+    _assert_state_equal(s2.state, t.state)
+    assert reg.last_publish_bytes < 0.5 * whole
+
+
+def test_cow_unchanged_planes_share_buffers():
+    """Satellite: unchanged segments share device buffers across consecutive
+    versions — by object identity for fully-clean planes (the directory
+    after a non-SMO batch) and by buffer identity for record planes whose
+    untouched rows rode an in-place donated scatter."""
+    t, keys, n = _loaded_table()
+    reg = SnapshotRegistry()
+    s0 = reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+    dir0 = s0.state.dir
+    key_hi_ptr = s0.state.key_hi.unsafe_buffer_pointer()
+
+    splits0 = int(np.asarray(t.state.n_splits))
+    t.insert(keys[n:n + 32], np.arange(32, dtype=np.uint32))
+    assert int(np.asarray(t.state.n_splits)) == splits0   # no SMO this batch
+    s1 = reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+
+    assert s1.state.dir is dir0                       # aliased, refcounted
+    assert reg.pool.refcount(dir0) == 2
+    # donated in place: same underlying buffer carried the untouched rows
+    assert s1.state.key_hi.unsafe_buffer_pointer() == key_hi_ptr
+    assert s0.state.key_hi.is_deleted()               # consumed, not leaked
+    assert reg.planes_aliased >= 1 and reg.planes_copied > 0
+
+
+def test_cow_smo_republishes_directory_plane():
+    t, keys, n = _loaded_table(n=600)
+    fe = DashFrontend(t, max_batch=128, queue_depth=1 << 14)
+    dir_before = fe.registry.current.state.dir
+    splits0 = int(np.asarray(t.state.n_splits))
+    # storm: enough fresh keys to force deferred bulk splits
+    for k in keys[600:1000]:
+        fe.submit(Op(INSERT, int(k), ycsb.expected_value(int(k))))
+    fe.drain()
+    assert int(np.asarray(t.state.n_splits)) > splits0
+    assert fe.registry.current.state.dir is not dir_before
+    _assert_state_equal(fe.registry.current.state, t.state)
+    assert fe.stats()["hint_misses"] == 0
+
+
+# ---------------------------------------------------------------------------
+# reclamation safety
+# ---------------------------------------------------------------------------
+
+def test_pinned_version_planes_are_never_donated():
+    t, keys, n = _loaded_table()
+    reg = SnapshotRegistry()
+    reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+    with reg.acquire() as snap:
+        t.update(keys[:64], np.arange(64, dtype=np.uint32) + 5000)
+        s1 = reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+        # the pinned version keeps its planes...
+        assert not snap.state.val.is_deleted()
+        # ...and still reads its own (pre-update) values
+        from repro.core.hashing import np_split_keys
+        hi, lo = np_split_keys(keys[:64])
+        f, v = dash_engine.search_batch(CFG, "eh", snap.state,
+                                        jnp.asarray(hi), jnp.asarray(lo))
+        assert np.asarray(f).all()
+        assert (np.asarray(v) == np.arange(64)).all()
+    _assert_state_equal(s1.state, t.state)
+
+
+def test_reclaiming_old_versions_never_invalidates_newer_ones():
+    """Regression for the acceptance criterion: no plane is reclaimed while
+    aliased by the live state or any pinned/newer snapshot. The directory
+    plane is aliased by every non-SMO version in the chain; reclaiming the
+    oldest versions must only drop references."""
+    t, keys, n = _loaded_table()
+    reg = SnapshotRegistry()
+    reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+    dir_plane = reg.current.state.dir
+    for i in range(8):                     # supersede -> retire -> reclaim
+        t.update(keys[:16], np.arange(16, dtype=np.uint32) + i)
+        reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+    assert reg.reclaimed >= 4              # old versions really were freed
+    cur = reg.current.state
+    assert cur.dir is dir_plane            # aliased through the whole chain
+    assert not cur.dir.is_deleted()        # ...and still alive
+    _assert_state_equal(cur, t.state)      # newest snapshot fully intact
+    f, _ = t.search(keys[:n])              # live state untouched by reclaims
+    assert f.all()
+    reg.flush()
+    assert not reg.current.state.dir.is_deleted()   # current never reclaimed
+
+
+def test_cow_force_full_after_crash():
+    """Crash surgery bypasses the version discipline; the dirty tracker's
+    force-full escape must make the next publish copy the whole state."""
+    t, keys, n = _loaded_table()
+    reg = SnapshotRegistry()
+    reg.publish_cow(CFG, t.state, dirty_hint=t.dirty.drain())
+    t.crash(np.random.default_rng(3), interrupt_smo=False)
+    t.restart()
+    hint = t.dirty.drain()
+    assert hint.full
+    s = reg.publish_cow(CFG, t.state, dirty_hint=hint)
+    _assert_state_equal(s.state, t.state)
+    assert reg.last_publish_bytes == layout.state_nbytes(t.state)
+
+
+# ---------------------------------------------------------------------------
+# version-bump completeness: content change implies version change
+# ---------------------------------------------------------------------------
+
+def _missed_rows(cfg, old, new):
+    """Bucket rows whose content changed without a version-word bump."""
+    BT, NB = cfg.buckets_total, cfg.num_buckets
+    vm = np.asarray(old.version).reshape(-1) != \
+        np.asarray(new.version).reshape(-1)
+    lead = old.version.shape[:-1]
+    vm_nb = (np.asarray(old.version) != np.asarray(new.version))[..., :NB] \
+        .reshape(-1)
+    missed = 0
+    for name in layout.BT_PLANES:
+        if name == "version":
+            continue
+        a = np.asarray(getattr(old, name)).reshape(len(vm), -1)
+        b = np.asarray(getattr(new, name)).reshape(len(vm), -1)
+        missed += int(((a != b).any(axis=1) & ~vm).sum())
+    for name in layout.NB_PLANES:
+        a = np.asarray(getattr(old, name)).reshape(len(vm_nb), -1)
+        b = np.asarray(getattr(new, name)).reshape(len(vm_nb), -1)
+        missed += int(((a != b).any(axis=1) & ~vm_nb).sum())
+    return missed
+
+
+@pytest.mark.parametrize("mode", ["eh", "lh"])
+def test_every_plane_mutation_bumps_its_version_row(mode):
+    """The COW ground truth: across insert (plain/displace/stash), delete
+    (incl. overflow-metadata clears), update, and split-heavy batches, no
+    record/metadata row ever changes without its version word changing."""
+    cls = DashEH if mode == "eh" else DashLH
+    t = cls(CFG)
+    keys = unique_keys(np.random.default_rng(0xBEEF + (mode == "lh")), 2200)
+    rng = np.random.default_rng(7)
+    cursor = 0
+    for step in range(10):
+        before = jax.tree.map(jnp.copy, t.state)
+        op = step % 5
+        if op in (0, 1, 3):            # inserts drive stash + splits
+            n = int(rng.integers(100, 260))
+            batch = keys[cursor:cursor + n]
+            cursor += n
+            t.insert(batch, np.arange(batch.size, dtype=np.uint32))
+        elif op == 2:
+            sel = keys[rng.integers(0, cursor, 80)]
+            t.update(sel, np.arange(80, dtype=np.uint32) + 9000)
+        else:
+            sel = keys[rng.integers(0, cursor, 80)]
+            t.delete(sel)
+        assert _missed_rows(CFG, before, t.state) == 0, (mode, step, op)
+
+
+def test_cow_frontend_mixed_workload_end_to_end():
+    """A mixed insert/read/update/delete/RMW stream through the COW
+    frontend: every publish stays bit-exact (reads come off snapshots), the
+    dirty-hint audit stays clean, and publish volume stays O(dirty)."""
+    t = DashEH(CFG)
+    fe = DashFrontend(t, max_batch=64, queue_depth=1 << 15)
+    keys = unique_keys(np.random.default_rng(0xF00), 1200)
+    rng = np.random.default_rng(11)
+    for k in keys[:700]:
+        fe.submit(Op(INSERT, int(k), ycsb.expected_value(int(k))))
+    fe.drain()
+    for i, k in enumerate(keys[700:1000]):
+        fe.submit(Op(INSERT, int(k), ycsb.expected_value(int(k))))
+        fe.submit(Op(READ, int(keys[rng.integers(0, 700)])))
+        if i % 3 == 0:
+            kk = int(keys[rng.integers(0, 700)])
+            fe.submit(Op(UPDATE, kk, ycsb.updated_value(kk)))
+        if i % 7 == 0:
+            fe.submit(Op(RMW, int(keys[rng.integers(0, 700)]), 123))
+        if i % 11 == 0:
+            fe.submit(Op(DELETE, int(keys[rng.integers(0, 700)])))
+    fe.drain()
+    _assert_state_equal(fe.registry.current.state, t.state)
+    s = fe.stats()
+    assert s["hint_misses"] == 0
+    assert s["published"] > 10
+    # steady-state publishes move far less than the whole state each
+    whole = layout.state_nbytes(t.state)
+    assert s["publish_bytes"] < 0.6 * s["published"] * whole
+    assert s["planes_aliased"] > 0 and s["reclaimed"] > 0
