@@ -13,14 +13,13 @@ also a differential check. Emits ``BENCH_batch_parallel.json``.
 """
 from __future__ import annotations
 
-import json
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DashConfig, DashEH, engine, hashing
-from .common import (Row, cache_stats, enable_compilation_cache,
+from .common import (Row, enable_compilation_cache, write_artifact,
                      ops_row, time_op, unique_keys)
 
 ARTIFACT = "BENCH_batch_parallel.json"
@@ -105,9 +104,7 @@ def run():
                     extra=f"{t_vmap / t_pall:.2f}x vs vmap"),
         ]
 
-    report["compilation_cache"] = cache_stats()
-    with open(ARTIFACT, "w") as f:
-        json.dump(report, f, indent=2)
+    write_artifact(ARTIFACT, report)
     return rows
 
 

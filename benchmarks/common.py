@@ -78,6 +78,50 @@ def cache_stats() -> dict:
     return {"enabled": _cache_enabled, **_CACHE_STATS}
 
 
+def provenance() -> dict:
+    """Run provenance stamped into every ``BENCH_*.json`` artifact: git SHA
+    (+dirty marker), jax/jaxlib versions, device kind, and a timestamp — so
+    the perf trajectory across PRs is attributable to a code state and a
+    substrate."""
+    import subprocess
+    import jax
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+    def _git(*args):
+        try:
+            return subprocess.run(("git",) + args, cwd=root, text=True,
+                                  capture_output=True, timeout=10
+                                  ).stdout.strip()
+        except Exception:
+            return ""
+    try:
+        import jaxlib
+        jaxlib_v = jaxlib.__version__
+    except Exception:          # pragma: no cover
+        jaxlib_v = ""
+    dev = jax.devices()[0]
+    return {
+        "git_sha": _git("rev-parse", "HEAD") or "unknown",
+        "git_dirty": bool(_git("status", "--porcelain")),
+        "jax": jax.__version__,
+        "jaxlib": jaxlib_v,
+        "backend": jax.default_backend(),
+        "device_kind": getattr(dev, "device_kind", str(dev)),
+        "device_count": jax.device_count(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S%z"),
+    }
+
+
+def write_artifact(path: str, report: dict):
+    """One artifact writer for every bench: stamps ``provenance`` and the
+    compilation-cache counters, then writes pretty JSON."""
+    import json
+    report.setdefault("provenance", provenance())
+    report.setdefault("compilation_cache", cache_stats())
+    with open(path, "w") as f:
+        json.dump(report, f, indent=2)
+
+
 @dataclasses.dataclass
 class Row:
     name: str

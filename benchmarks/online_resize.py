@@ -25,7 +25,6 @@ Emits ``BENCH_online_resize.json``.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import numpy as np
@@ -34,7 +33,7 @@ from repro.core import DashConfig, DashEH, layout
 from repro.serving.frontend import (INSERT, READ, DashFrontend, Op,
                                     StopTheWorldFrontend)
 from repro.workloads import ycsb
-from .common import Row, cache_stats, enable_compilation_cache
+from .common import Row, enable_compilation_cache, write_artifact
 
 ARTIFACT = "BENCH_online_resize.json"
 
@@ -156,7 +155,6 @@ def run():
     thr = report["frontend"]["ops_per_s"] / report["baseline"]["ops_per_s"]
     report["p99_ratio"] = ratio
     report["throughput_ratio"] = thr
-    report["compilation_cache"] = cache_stats()
     # acceptance gate 1: overlapping reads with the storm at equal offered
     # load must at least halve tail read latency
     assert ratio <= 0.5, f"p99 ratio {ratio:.3f} > 0.5"
@@ -172,8 +170,7 @@ def run():
                     f"batch vs {report['frontend']['whole_copy_bytes_per_batch']}B"
                     " whole-copy"))
 
-    with open(ARTIFACT, "w") as f:
-        json.dump(report, f, indent=2)
+    write_artifact(ARTIFACT, report)
     return rows
 
 

@@ -14,6 +14,8 @@ Modules map 1:1 to the paper's artifacts:
   fig13  concurrency          optimistic vs pessimistic search
   table1 recovery_time        restart cost vs data size
   fig14  lazy_recovery        post-restart throughput timeline
+  durable durable_restart     durable reopen ttfq + flush volume + torn crash
+                              (+ JSON artifact)
   fig15  allocator            preallocated pool vs grow-on-demand
   extra  dht_roofline         256-chip DHT fabric-vs-HBM accounting
   extra  kernel_probe         Pallas probe path timing (interpret)
@@ -41,6 +43,7 @@ MODULES = [
     ("fig13", "benchmarks.concurrency"),
     ("table1", "benchmarks.recovery_time"),
     ("fig14", "benchmarks.lazy_recovery"),
+    ("durable", "benchmarks.durable_restart"),
     ("fig15", "benchmarks.allocator"),
     ("dht", "benchmarks.dht_roofline"),
     ("kernel", "benchmarks.kernel_probe"),

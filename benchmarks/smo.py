@@ -15,7 +15,6 @@ Emits ``BENCH_smo.json``.
 """
 from __future__ import annotations
 
-import json
 import time
 
 import jax
@@ -23,7 +22,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DashConfig, DashEH, TableFullError, dash_eh, engine, smo
-from .common import (Row, cache_stats, enable_compilation_cache,
+from .common import (Row, enable_compilation_cache, write_artifact,
                      ops_row, time_op, unique_keys)
 
 ARTIFACT = "BENCH_smo.json"
@@ -147,9 +146,7 @@ def run():
             f"{shrink_times['bulk']['merges']} merges"),
     ]
 
-    report["compilation_cache"] = cache_stats()
-    with open(ARTIFACT, "w") as f:
-        json.dump(report, f, indent=2)
+    write_artifact(ARTIFACT, report)
     return rows
 
 

@@ -6,6 +6,9 @@
 #   2. python -m compileall    (syntax/bytecode sweep over the library)
 #   3. benchmarks/run.py --list (driver + every bench module imports cleanly,
 #                               artifact freshness report; runs nothing)
+#   4. durable smoke           (write -> KILL the process -> reopen in a
+#                               fresh process; the persistence contract is
+#                               checked across a real process boundary)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -19,5 +22,44 @@ python -m compileall -q src
 
 echo "== bench registry =="
 python -m benchmarks.run --list
+
+echo "== durable smoke (write -> kill -> reopen) =="
+SMOKE_DIR="$(mktemp -d)"
+trap 'rm -rf "$SMOKE_DIR"' EXIT
+# writer: insert + flush acknowledged keys, then DIE without a clean close
+# (os._exit skips every destructor — the closest a test gets to kill -9)
+python - "$SMOKE_DIR/smoke.pool" <<'PY'
+import os, sys
+import numpy as np
+from repro.core import DashConfig
+from repro import persist
+t = persist.create(sys.argv[1], DashConfig(max_segments=16, dir_depth_max=8,
+                                           num_buckets=16, num_slots=8))
+keys = np.unique(np.random.default_rng(0xC1).integers(1, 2**63, 4000,
+                                                      np.uint64))[:1500]
+t.insert(keys, (np.arange(1500) + 1).astype(np.uint32))
+t.flush()
+os._exit(0)
+PY
+# reopener: a fresh process maps the pool, instant-restarts, verifies every
+# acknowledged key, then closes cleanly and reopens once more
+python - "$SMOKE_DIR/smoke.pool" <<'PY'
+import sys
+import numpy as np
+from repro import persist
+t, info = persist.reopen(sys.argv[1])
+assert not info["clean"], "writer died dirty; pool must say so"
+keys = np.unique(np.random.default_rng(0xC1).integers(1, 2**63, 4000,
+                                                      np.uint64))[:1500]
+f, v = t.search(keys)
+assert f.all(), f"lost {int((~f).sum())} acknowledged keys"
+assert (v == np.arange(1500) + 1).all()
+t.close()
+t2, info2 = persist.reopen(sys.argv[1])
+assert info2["clean"]
+f2, _ = t2.search(keys[:256])
+assert f2.all() and t2.recovered_segments == 0
+print(f"durable smoke OK: {int(f.sum())} keys survived the kill")
+PY
 
 echo "CI OK"

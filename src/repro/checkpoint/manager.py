@@ -16,6 +16,23 @@ Design goals mirrored from the paper:
 
 Async saves run on a background thread (snapshot -> serialize off the
 critical path), with retention of the newest K commits.
+
+Commit protocol (what tests/test_checkpoint.py crash-tests): tensors land in
+a staging dir, the manifest is written last, ONE atomic ``rename`` publishes
+the commit, and ``LATEST`` is repointed with an atomic ``os.replace``. A
+crash anywhere between the first tensor write and the final replace restores
+the PREVIOUS step (``latest_step`` also survives a dangling/missing LATEST
+by scanning for the newest directory with a valid manifest).
+
+How this differs from the PM pool (src/repro/persist/): this manager takes
+GENERIC ASYNC TREE SNAPSHOTS — whole-model copies of an arbitrary pytree,
+each commit a fresh immutable directory, atomicity by rename, cost O(model)
+per save. The PM pool is IN-PLACE INCREMENTAL PLANES — one fixed-layout
+memory-mapped file per table, flushed at dirty-bucket-row granularity with
+ordered stores + a redo log for rebuilt rows, cost O(dirty) per publish.
+Checkpoints suit the trainer (low save frequency, full-state restores,
+sharded reload); the pool suits the serving table (per-batch durability,
+instant restart, lazy recovery).
 """
 from __future__ import annotations
 
@@ -63,6 +80,25 @@ class CheckpointManager:
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
         self._lock = threading.Lock()
+        self._recover_crashed_saves()
+
+    def _recover_crashed_saves(self):
+        """Sweep the artifacts a crash mid-save can leave: stage dirs are
+        uncommitted garbage (dropped); a ``.trash_<step>`` whose step dir is
+        MISSING is the only copy of that step — the crash hit between the
+        move-aside and the commit rename — and is restored."""
+        for d in self.dir.iterdir():
+            if not d.is_dir():
+                continue
+            if d.name.startswith(".stage_"):
+                shutil.rmtree(d, ignore_errors=True)
+            elif d.name.startswith(".trash_"):
+                step = int(d.name.split("_")[1])
+                final = self.dir / f"step_{step:010d}"
+                if final.exists():
+                    shutil.rmtree(d, ignore_errors=True)
+                else:
+                    d.rename(final)
 
     # ----- save ---------------------------------------------------------
 
@@ -103,11 +139,20 @@ class CheckpointManager:
                     "created": time.time(), "tensors": index}
         (stage / "manifest.json").write_text(json.dumps(manifest))
         final = self.dir / f"step_{step:010d}"
+        trash = None
         if final.exists():
-            shutil.rmtree(final)
+            # re-saving an existing step: move the old commit aside instead
+            # of deleting it — a crash between rmtree and rename must not
+            # lose the only copy of the step
+            trash = self.dir / f".trash_{step}_{os.getpid()}"
+            if trash.exists():
+                shutil.rmtree(trash)
+            final.rename(trash)
         stage.rename(final)                                   # atomic commit
         (self.dir / "LATEST.tmp").write_text(final.name)
         os.replace(self.dir / "LATEST.tmp", self.dir / "LATEST")
+        if trash is not None:
+            shutil.rmtree(trash, ignore_errors=True)
         self._gc()
 
     def _gc(self):
@@ -119,10 +164,27 @@ class CheckpointManager:
     # ----- restore ------------------------------------------------------
 
     def latest_step(self) -> Optional[int]:
+        """Newest committed step. LATEST is the fast path; when it is
+        missing or dangling (crash between the commit rename and the
+        ``os.replace``), fall back to the newest ``step_*`` directory whose
+        manifest parses — a committed rename IS a valid commit even if the
+        pointer write was lost."""
         latest = self.dir / "LATEST"
-        if not latest.exists():
-            return None
-        return int(latest.read_text().strip().split("_")[-1])
+        if latest.exists():
+            name = latest.read_text().strip()
+            if (self.dir / name / "manifest.json").exists():
+                return int(name.split("_")[-1])
+        best = None
+        for d in sorted(self.dir.iterdir(), reverse=True):
+            if not (d.is_dir() and d.name.startswith("step_")):
+                continue
+            try:
+                json.loads((d / "manifest.json").read_text())
+            except (OSError, ValueError):
+                continue
+            best = int(d.name.split("_")[-1])
+            break
+        return best
 
     def restore_manifest(self):
         """INSTANT restore: read manifest only, bump version if dirty.

@@ -308,6 +308,12 @@ SEG_META_PLANES = ("local_depth", "seg_state", "side_link", "seg_version",
 #: the fully-expanded directory: aliased across versions until an SMO
 #: publishes a new mapping (device-compared at publish).
 DIR_PLANES = ("dir",)
+#: everything else: scalars + the pointer-mode key heap — tiny (or version-
+#: word-free), copied/flushed whole every publish.
+SCALAR_PLANES = ("global_depth", "watermark", "clean", "gver", "lh_word",
+                 "n_items", "n_splits", "n_doublings", "key_heap", "heap_top")
+assert set(BT_PLANES + NB_PLANES + SEG_META_PLANES + DIR_PLANES
+           + SCALAR_PLANES) == set(DashState._fields)
 
 
 def state_nbytes(state: DashState) -> int:
@@ -315,3 +321,141 @@ def state_nbytes(state: DashState) -> int:
     publish would pay without COW (the benchmark's baseline volume)."""
     import jax
     return int(sum(leaf.nbytes for leaf in jax.tree.leaves(state)))
+
+
+# --- durable PM-pool file layout (PR 5) --------------------------------------
+# The emulated-PM pool (persist/pool.py) persists every plane of the state
+# pytree into one memory-mapped file: a superblock (config / clean marker /
+# flush sequence) followed by the plane regions in ``DashState._fields``
+# order, each aligned to PM-line granularity. This map is the single source
+# of truth shared by the pool (region views) and the writeback engine (dirty
+# bucket-row addressing: the flattened row index of ``version[..., b]``
+# addresses the same file row in every BT plane, mirroring the COW publish's
+# row index space).
+
+POOL_ALIGN = 64            # emulated PM line (clwb granularity)
+SUPERBLOCK_BYTES = 4096    # two checksummed superblock slots live here
+
+
+@dataclasses.dataclass(frozen=True)
+class PlaneSpec:
+    """One plane's file region: ``[offset, offset + nbytes)`` holds the
+    C-contiguous array bytes; ``group`` names the flush class (``bt`` /
+    ``nb`` record planes flushed at bucket-row granularity, ``seg`` /
+    ``dir`` compared-then-copied whole, ``scalar`` always copied)."""
+    name: str
+    offset: int
+    shape: tuple
+    dtype: np.dtype
+    group: str
+
+    @property
+    def nbytes(self) -> int:
+        return int(np.prod(self.shape, dtype=np.int64)) * self.dtype.itemsize
+
+    @property
+    def rows(self) -> int:
+        """Flush rows: bucket rows for record planes (leading axes up to and
+        including the bucket axis), 1 for whole-copy planes."""
+        if self.group == "bt" or self.group == "nb":
+            return int(np.prod(self.shape[:self._bucket_axis + 1],
+                               dtype=np.int64))
+        return 1
+
+    @property
+    def _bucket_axis(self) -> int:
+        # (S, BT, ...) single table or (n_shards, S, BT, ...) sharded: the
+        # bucket axis is the last for meta/version (2D rows), else axis -2
+        return len(self.shape) - 1 if self.name in ("meta", "version",
+                                                    "ometa") else len(self.shape) - 2
+
+    @property
+    def row_nbytes(self) -> int:
+        return self.nbytes // self.rows
+
+
+def _plane_group(name: str) -> str:
+    if name in BT_PLANES:
+        return "bt"
+    if name in NB_PLANES:
+        return "nb"
+    if name in SEG_META_PLANES:
+        return "seg"
+    if name in DIR_PLANES:
+        return "dir"
+    return "scalar"
+
+
+@dataclasses.dataclass(frozen=True)
+class LogLayout:
+    """The pool's redo-log region (between the superblock and the planes):
+    SMO-rebuilt rows — whose in-place rewrite can never be made atomic by
+    store ordering alone — are staged here (struct-of-arrays sections:
+    row ids, then each plane's rows contiguously), committed via the
+    superblock, and only then applied to their home rows. Sized for the
+    worst case (every row + the routing planes); the file is sparse, so
+    unused capacity costs nothing."""
+    offset: int
+    bt_rows: int               # capacity, in rows
+    nb_rows: int
+    bt_row_nbytes: int         # per-row payload across all BT planes
+    nb_row_nbytes: int
+    routing_nbytes: int        # dir + seg-meta + scalar planes, contiguous
+
+    @property
+    def bt_offset(self) -> int:
+        return self.offset
+
+    @property
+    def nb_offset(self) -> int:
+        return self.bt_offset + self.bt_rows * (8 + self.bt_row_nbytes)
+
+    @property
+    def routing_offset(self) -> int:
+        return self.nb_offset + self.nb_rows * (8 + self.nb_row_nbytes)
+
+    @property
+    def nbytes(self) -> int:
+        return (self.routing_offset - self.offset) + self.routing_nbytes
+
+
+def pool_plane_specs(cfg: DashConfig, mode: str = "eh"):
+    """``(specs, log, total_bytes)``: the plane→file-offset map of a pool
+    holding one table of this config, shapes derived abstractly (no
+    allocation). File layout: superblock | redo log | plane regions in
+    ``DashState._fields`` order, each 64-aligned."""
+    import jax
+
+    def _align(n):
+        return (n + POOL_ALIGN - 1) // POOL_ALIGN * POOL_ALIGN
+
+    shapes = jax.eval_shape(lambda: make_state(cfg, mode))
+    raw = {name: PlaneSpec(name=name, offset=0,
+                           shape=tuple(getattr(shapes, name).shape),
+                           dtype=np.dtype(getattr(shapes, name).dtype),
+                           group=_plane_group(name))
+           for name in DashState._fields}
+    bt_rows = raw["version"].rows
+    nb_rows = raw["ometa"].rows
+    log = LogLayout(
+        offset=SUPERBLOCK_BYTES,
+        bt_rows=bt_rows, nb_rows=nb_rows,
+        bt_row_nbytes=sum(raw[n].row_nbytes for n in BT_PLANES),
+        nb_row_nbytes=sum(raw[n].row_nbytes for n in NB_PLANES),
+        routing_nbytes=sum(raw[n].nbytes for n in
+                           DIR_PLANES + SEG_META_PLANES + SCALAR_PLANES))
+    specs = []
+    off = _align(SUPERBLOCK_BYTES + log.nbytes)
+    for name in DashState._fields:
+        spec = dataclasses.replace(raw[name], offset=off)
+        specs.append(spec)
+        off += _align(spec.nbytes)
+    return tuple(specs), log, off
+
+
+def pool_nbytes(cfg: DashConfig, mode: str = "eh") -> int:
+    """Plane-region bytes of one pool — the whole-pool rewrite cost a flush
+    would pay without dirty tracking (the durable benchmark's baseline
+    volume; the sparse redo-log capacity is excluded on purpose)."""
+    specs, _, _ = pool_plane_specs(cfg, mode)
+    return sum(s.nbytes for s in specs)

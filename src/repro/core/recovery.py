@@ -12,6 +12,14 @@ recovery handles:
   * duplicated records (displacement step 1 done, step 2 lost),
   * wiped overflow metadata (paper: "we do not explicitly persist it"),
   * an in-flight SMO (segment in SPLITTING with a NEW side-linked neighbor).
+
+The durable path (src/repro/persist/) reuses this machinery unchanged: a
+pool torn mid-flush reopens through ``instant_restart`` (the superblock's
+clean marker overriding the possibly-stale plane scalar) and the same lazy
+per-segment recovery absorbs the torn-flush artifact classes — they are a
+subset of the simulator's (half-done displacements become in-segment dups,
+stale overflow metadata is rebuilt, an interrupted SMO is finished or rolled
+back from ``seg_state``/``side_link``).
 """
 from __future__ import annotations
 
@@ -34,13 +42,20 @@ I32 = jnp.int32
 # instant restart — O(1) regardless of table size (Table 1's 57 ms analog)
 # ---------------------------------------------------------------------------
 
-def instant_restart(state: DashState):
-    """Read ``clean``; bump ``V`` if the shutdown was dirty. Nothing else."""
+def instant_restart(state: DashState, clean_override=None):
+    """Read ``clean``; bump ``V`` if the shutdown was dirty. Nothing else.
+
+    ``clean_override`` is the durable path's hook (persist/): the pool
+    superblock's clean marker is written post-fence at every commit and is
+    therefore authoritative over the plane region's ``clean`` scalar, which
+    a torn scalar flush can leave stale. Either way the restarted state is
+    marked dirty-serving (``clean=False``): a crash from here on must
+    recover."""
     t0 = time.perf_counter()
-    was_clean = bool(np.asarray(state.clean))
-    if was_clean:
-        state = state._replace(clean=jnp.asarray(False))
-    else:
+    was_clean = bool(np.asarray(state.clean)) if clean_override is None \
+        else bool(clean_override)
+    state = state._replace(clean=jnp.asarray(False))
+    if not was_clean:
         state = state._replace(gver=state.gver + U32(1))
     return state, {"clean": was_clean, "seconds": time.perf_counter() - t0}
 

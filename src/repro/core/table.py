@@ -103,14 +103,19 @@ class DashTable:
     mode: str = "eh"
 
     def __init__(self, cfg: DashConfig, lazy_recovery: bool = True,
-                 smo_mode: str = "bulk"):
+                 smo_mode: str = "bulk",
+                 state: Optional[DashState] = None):
         self.cfg = cfg
-        self.state: DashState = layout.make_state(cfg, self.mode)
+        # `state` restores a persisted table (persist.reopen) without
+        # paying a throwaway full-pool allocation
+        self.state: DashState = state if state is not None \
+            else layout.make_state(cfg, self.mode)
         self.lazy_recovery = lazy_recovery
         self.smo_mode = smo_mode
         self.recovered_segments = 0   # stat: lazy recoveries performed
         self.free_segments: list = []  # merged-away ids, recycled by splits
         self.dirty = DirtyTracker()   # dirty planes since the last publish
+        self.writeback = None         # durable PM-pool engine (persist/)
 
     # -- key plumbing --------------------------------------------------------
 
@@ -320,18 +325,47 @@ class DashTable:
 
     # -- lifecycle / stats ----------------------------------------------------
 
+    def attach_writeback(self, wb):
+        """Bind a durable PM-pool writeback engine (persist/writeback.py);
+        ``flush()`` (and the serving frontend's publish) then mirror every
+        acknowledged batch into the pool in O(dirty) bytes."""
+        self.writeback = wb
+
+    def flush(self) -> int:
+        """Make the live state durable: drain the dirty tracker and write
+        only the dirty planes to the attached pool (ordered flush+fence —
+        the acknowledgment point of the durable contract). Returns bytes
+        written."""
+        assert self.writeback is not None, "no pool attached (persist.create)"
+        return self.writeback.flush(self.state, self.dirty.drain())
+
+    def close(self):
+        """Durable clean shutdown: set the clean marker and flush, so the
+        next ``persist.reopen`` skips recovery entirely (paper Sec. 4.8's
+        graceful path)."""
+        self.graceful_shutdown()
+        if self.writeback is not None:
+            self.flush()
+            self.writeback.pool.close()
+
     def graceful_shutdown(self):
         self.state = self.state._replace(clean=jnp.asarray(True))
 
     def restart(self):
-        """Instant recovery (Sec. 4.8): O(1) work, constant in data size."""
+        """Instant recovery (Sec. 4.8): O(1) work, constant in data size.
+        (Volatile restart of the in-memory state; the durable equivalent —
+        map the pool, read the superblock, same constant work — is
+        ``persist.reopen``.)"""
         self.state, work = recovery.instant_restart(self.state)
         self.dirty.note_full()   # lazy recovery will rewrite at first touch
         return work
 
     def crash(self, rng: Optional[np.random.Generator] = None, **kw):
         # crash surgery rewrites planes WITHOUT version bumps — the next
-        # COW publish must not trust the version diff
+        # COW publish (and durable flush) must not trust the version diff.
+        # With a pool attached, `crash(); flush()` emulates the paper's
+        # crash-with-artifacts-IN-PM: the artifacts land durably and the
+        # reopened pool must lazily recover them (tests/test_persist.py).
         self.dirty.note_full()
         self.state = recovery.simulate_crash(self.cfg, self.mode, self.state,
                                              rng or np.random.default_rng(0), **kw)

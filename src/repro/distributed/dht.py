@@ -162,19 +162,60 @@ def build_dht_ops(cfg: DashConfig, mesh: Mesh, axes=("data",),
 
 
 class DistributedDash:
-    """Host wrapper: device-sharded Dash with shard-local SMO handling."""
+    """Host wrapper: device-sharded Dash with shard-local SMO handling.
+
+    ``state`` lets a caller restore a previously persisted sharded state
+    (``persist.reopen_shards`` stacks one host pytree from the per-shard
+    pools); ``attach_pools`` binds one durable pool per shard — flushed
+    independently, so a dirty shard restart recovers shard-locally and
+    never touches its neighbors' pools."""
 
     def __init__(self, cfg: DashConfig, mesh: Mesh, axes=("data",),
                  capacity: int | None = None, q_local_hint: int = 1024,
-                 search_batching: str = "vmap"):
+                 search_batching: str = "vmap", state: DashState | None = None):
         self.cfg = cfg
         self.mesh = mesh
         self.axes = tuple(axes)
         self.search_fn, self.insert_fn, self.n_shards = build_dht_ops(
             cfg, mesh, self.axes, capacity, q_local_hint, search_batching)
         sh = NamedSharding(mesh, P(self.axes))
-        self.state = jax.device_put(make_sharded_state(cfg, self.n_shards),
-                                    sh)
+        if state is None:
+            state = make_sharded_state(cfg, self.n_shards)
+        else:
+            assert state.version.shape[0] == self.n_shards, \
+                "restored state shard count != mesh shard count"
+        self.state = jax.device_put(state, sh)
+        self.writebacks = None        # per-shard durable pools (persist/)
+
+    def attach_pools(self, writebacks):
+        """Bind one durable pool per shard and mark the serving period
+        dirty (the clean markers go durable only via ``close_pools``).
+        Fresh pools get the current state flushed immediately, so a crash
+        before the first ``flush_pools`` reopens to a valid table instead
+        of an all-zeros plane region (mirrors ``persist.create``)."""
+        assert len(writebacks) == self.n_shards
+        self.writebacks = list(writebacks)
+        self.state = self.state._replace(
+            clean=jnp.zeros_like(self.state.clean))
+        if any(wb.pool.sb.flush_seq == 0 for wb in self.writebacks):
+            self.flush_pools()
+
+    def flush_pools(self) -> int:
+        """Flush every shard into its own pool (O(dirty) per shard: each
+        shard's version-plane diff runs against its own pool mirror)."""
+        from repro import persist
+        assert self.writebacks is not None, "no pools attached"
+        return persist.flush_shards(self.state, self.writebacks)
+
+    def close_pools(self):
+        """Durable clean shutdown of every shard pool."""
+        import jax.numpy as jnp
+        assert self.writebacks is not None, "no pools attached"
+        self.state = self.state._replace(
+            clean=jnp.ones_like(self.state.clean))
+        self.flush_pools()
+        for wb in self.writebacks:
+            wb.pool.close()
 
     def _shape_queries(self, keys):
         keys = np.asarray(keys, np.uint64)
@@ -305,8 +346,12 @@ class ShardFrontend(frontend.FrontendBase):
         a (n_shards, S, ...) leading shape, and the same version-plane diff
         drives the O(dirty) scatter — an insert burst republises only the
         bucket rows its owners wrote, a shard split storm only the rebuilt
-        segments (plus each shard's directory when it changed)."""
+        segments (plus each shard's directory when it changed). With pools
+        attached, every publish also flushes each shard into its own pool
+        (flush-on-publish: acknowledged DHT ops are durable)."""
         self.registry.publish_cow(self.dht.cfg, self.dht.state)
+        if self.dht.writebacks is not None:
+            self.dht.flush_pools()
         self._dirty = False
 
     def submit(self, op) -> bool:
@@ -316,6 +361,16 @@ class ShardFrontend(frontend.FrontendBase):
             self.writes.rejected += 1
             return False
         return super().submit(op)
+
+    def stats(self) -> dict:
+        out = super().stats()
+        if self.dht.writebacks is not None:
+            out["flushes"] = sum(w.flushes for w in self.dht.writebacks)
+            out["flushed_bytes"] = sum(w.flushed_bytes
+                                       for w in self.dht.writebacks)
+            out["pool_bytes"] = sum(w.pool.plane_bytes
+                                    for w in self.dht.writebacks)
+        return out
 
     def _write_pending(self) -> bool:
         return self._pending is not None or self._split_keys is not None

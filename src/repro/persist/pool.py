@@ -1,0 +1,318 @@
+"""Emulated-PM pool file: memory-mapped plane regions + checksummed superblock.
+
+The pool is the durable mirror of one ``DashState`` (the paper's PM pool,
+emulated with ``np.memmap`` over an ordinary file — on a PM-backed mount the
+same code is real persistent memory programming modulo the DAX flush path):
+
+  * byte 0: two 2 KB **superblock slots**, written alternately with a
+    monotonic ``flush_seq`` and a CRC32 over the payload. A torn superblock
+    write can only corrupt the slot being written; ``open`` picks the valid
+    slot with the highest sequence — the 8-byte-atomic commit record of real
+    PM, emulated at slot granularity.
+  * from ``layout.SUPERBLOCK_BYTES``: one region per state plane, laid out
+    by ``core/layout.py:pool_plane_specs`` (the plane↔file-offset map) in
+    ``DashState._fields`` order, 64-byte aligned. Record planes are
+    addressed at bucket-row granularity: the flattened row index of
+    ``version[..., b]`` addresses the same row in every BT plane — the same
+    row index space the COW publish scatters (PR 4).
+
+The pool itself is policy-free: ``write_rows`` / ``write_plane`` land bytes
+in the mapping (emulated stores), ``fence`` flushes the mapping (emulated
+``sfence`` after a ``clwb`` train), ``commit`` writes the next superblock
+slot. The ORDER of those calls — what makes a torn crash recoverable — is
+the writeback engine's contract (persist/writeback.py).
+
+The superblock payload also carries the table config + mode, so ``open``
+reconstructs the exact ``DashConfig`` the pool was created with: a reopened
+pool needs no out-of-band schema.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import zlib
+from typing import Optional
+
+import numpy as np
+
+from repro.core import layout
+from repro.core.layout import DashConfig, DashState
+
+MAGIC = b"DASHPM01"
+FORMAT = 1
+SLOT_BYTES = 2048                      # two slots fit in SUPERBLOCK_BYTES
+assert 2 * SLOT_BYTES <= layout.SUPERBLOCK_BYTES
+_HDR = 16                              # magic(8) + crc(4) + payload_len(4)
+
+
+class PoolError(RuntimeError):
+    pass
+
+
+@dataclasses.dataclass
+class Superblock:
+    """The durable commit record. ``clean`` is authoritative over the state
+    region's ``clean`` scalar at reopen (a torn scalar flush can leave the
+    plane region stale; the superblock is written last, post-fence).
+
+    ``log_*`` describe the redo-log contents this commit staged (SMO-rebuilt
+    rows + routing planes): committed-but-unapplied entries are re-applied
+    at open (idempotent — the log holds absolute row contents)."""
+    mode: str
+    cfg: dict
+    flush_seq: int = 0                 # 0 = created, never flushed
+    gver: int = 1
+    clean: bool = True
+    log_bt: int = 0                    # logged BT-row entries
+    log_nb: int = 0                    # logged NB-row entries
+    log_routing: bool = False          # routing/scalar planes logged too
+    log_crc: int = 0                   # crc32 over the used log bytes
+
+    def encode(self) -> bytes:
+        payload = json.dumps(dataclasses.asdict(self)).encode()
+        if _HDR + len(payload) > SLOT_BYTES:
+            raise PoolError("superblock payload too large")
+        hdr = MAGIC + zlib.crc32(payload).to_bytes(4, "little") + \
+            len(payload).to_bytes(4, "little")
+        return hdr + payload
+
+    @classmethod
+    def decode(cls, raw: bytes) -> Optional["Superblock"]:
+        """None on an invalid/torn slot (bad magic, length, or CRC)."""
+        if raw[:8] != MAGIC:
+            return None
+        crc = int.from_bytes(raw[8:12], "little")
+        n = int.from_bytes(raw[12:16], "little")
+        if n <= 0 or _HDR + n > SLOT_BYTES:
+            return None
+        payload = raw[_HDR:_HDR + n]
+        if zlib.crc32(payload) != crc:
+            return None
+        try:
+            return cls(**json.loads(payload.decode()))
+        except (ValueError, TypeError):
+            return None
+
+
+class PmPool:
+    """One memory-mapped pool file holding one table's planes.
+
+    ``create`` allocates and zero-fills (a fresh PM allocation); ``open``
+    maps an existing file and validates/loads the superblock. Plane views
+    write through the mapping; ``fence()`` is the ordering point.
+    """
+
+    def __init__(self, path: str, sb: Superblock):
+        self.path = path
+        self.sb = sb
+        self.cfg = DashConfig(**sb.cfg)
+        self.mode = sb.mode
+        self.specs, self.log, self.total_bytes = layout.pool_plane_specs(
+            self.cfg, self.mode)
+        self.plane_bytes = sum(s.nbytes for s in self.specs)
+        self._by_name = {s.name: s for s in self.specs}
+        self._mm = np.memmap(path, dtype=np.uint8, mode="r+",
+                             shape=(self.total_bytes,))
+        self._views = {}
+        for s in self.specs:
+            raw = self._mm[s.offset:s.offset + s.nbytes]
+            self._views[s.name] = raw.view(s.dtype).reshape(s.shape)
+        self.fences = 0
+        self.apply_log()               # redo a committed-but-unapplied log
+
+    # -- lifecycle ---------------------------------------------------------
+
+    @classmethod
+    def create(cls, path: str, cfg: DashConfig, mode: str = "eh") -> "PmPool":
+        if os.path.exists(path):
+            raise PoolError(f"pool exists: {path}")
+        sb = Superblock(mode=mode, cfg=dataclasses.asdict(cfg))
+        _, _, total = layout.pool_plane_specs(cfg, mode)
+        with open(path, "wb") as f:
+            f.truncate(total)
+        pool = cls(path, sb)
+        pool._write_slot(0, sb)
+        pool.fence()
+        return pool
+
+    @classmethod
+    def open(cls, path: str) -> "PmPool":
+        if not os.path.exists(path):
+            raise PoolError(f"no pool at {path}")
+        with open(path, "rb") as f:
+            head = f.read(2 * SLOT_BYTES)
+        slots = [Superblock.decode(head[i * SLOT_BYTES:(i + 1) * SLOT_BYTES])
+                 for i in range(2)]
+        valid = [s for s in slots if s is not None]
+        if not valid:
+            raise PoolError(f"no valid superblock in {path}")
+        sb = max(valid, key=lambda s: s.flush_seq)
+        return cls(path, sb)
+
+    def close(self):
+        self.fence()
+        self._views.clear()
+        self._mm = None
+
+    # -- emulated stores ---------------------------------------------------
+
+    def plane(self, name: str) -> np.ndarray:
+        """Writable view of one plane region (writes land in the mapping)."""
+        return self._views[name]
+
+    def spec(self, name: str) -> layout.PlaneSpec:
+        return self._by_name[name]
+
+    def rows(self, name: str) -> np.ndarray:
+        """Row-major (rows, row_bytes…) view of a record plane."""
+        s = self._by_name[name]
+        return self._views[name].reshape(s.rows, -1)
+
+    def write_rows(self, name: str, ids: np.ndarray, live_rows: np.ndarray
+                   ) -> int:
+        """Scatter dirty rows of ``live_rows`` (same row-major layout) into
+        the plane region; returns bytes written. One call = one emulated
+        ordered-store op (a clwb train over the dirty lines)."""
+        if ids.size == 0:
+            return 0
+        self.rows(name)[ids] = live_rows[ids]
+        return int(ids.size) * self._by_name[name].row_nbytes
+
+    def write_plane(self, name: str, live: np.ndarray) -> int:
+        """Overwrite one whole plane region; returns bytes written."""
+        view = self._views[name]
+        view[...] = live.reshape(view.shape)
+        return self._by_name[name].nbytes
+
+    def fence(self):
+        """Ordering point: every store issued before this is durable before
+        any store issued after (msync as the clwb+sfence analog)."""
+        if self._mm is not None:
+            self._mm.flush()
+        self.fences += 1
+
+    # -- redo log ----------------------------------------------------------
+    # SMO-rebuilt rows are staged here instead of being rewritten in place:
+    # an in-place segment rebuild overwrites slots still claimed by the old
+    # meta word, so no store order makes it crash-atomic. The log section
+    # is struct-of-arrays: int64 row ids, then each plane's logged rows
+    # contiguously; routing planes (when logged) are whole-plane snapshots.
+
+    _LOG_ROUTING = (layout.DIR_PLANES + layout.SEG_META_PLANES
+                    + layout.SCALAR_PLANES)
+
+    def _encode_log(self, ids_bt, ids_nb, routing: bool, live: dict) -> bytes:
+        parts = [np.ascontiguousarray(ids_bt.astype(np.int64))]
+        for n in layout.BT_PLANES:
+            parts.append(np.ascontiguousarray(
+                live[n].reshape(self.log.bt_rows, -1)[ids_bt]))
+        parts.append(np.ascontiguousarray(ids_nb.astype(np.int64)))
+        for n in layout.NB_PLANES:
+            parts.append(np.ascontiguousarray(
+                live[n].reshape(self.log.nb_rows, -1)[ids_nb]))
+        if routing:
+            for n in self._LOG_ROUTING:
+                parts.append(np.ascontiguousarray(live[n]))
+        return b"".join(p.tobytes() for p in parts)
+
+    def write_log(self, ids_bt, ids_nb, routing: bool, live: dict) -> tuple:
+        """Stage rebuilt rows (+ optionally the routing planes) into the
+        log region; returns (nbytes, crc) for the commit record. One
+        emulated store op (the caller fences before committing)."""
+        enc = self._encode_log(ids_bt, ids_nb, routing, live)
+        self._mm[self.log.offset:self.log.offset + len(enc)] = \
+            np.frombuffer(enc, dtype=np.uint8)
+        return len(enc), zlib.crc32(enc)
+
+    def apply_log(self):
+        """Redo a committed log: scatter the logged rows/planes into their
+        home regions. Idempotent (absolute contents); called at open and by
+        the writeback right after its commit fence.
+
+        A checksum MISMATCH means the region was overwritten by a LATER
+        flush's staging (phase 5) that never committed — and a later flush
+        can only run after the committed log was applied (phase 7, or this
+        very method at a previous open), so the mismatching log is stale
+        and safely skipped. Within the emulated-store crash model nothing
+        else writes the region; media corruption is out of scope."""
+        sb = self.sb
+        if not (sb.log_bt or sb.log_nb or sb.log_routing):
+            return 0
+        off = self.log.offset
+        raw = self._mm[off:off + self.log.nbytes]
+        if zlib.crc32(raw[:self._log_used_bytes(sb)].tobytes()) != sb.log_crc:
+            return 0                   # stale log of an already-applied commit
+        pos = 0
+
+        def take(nbytes):
+            nonlocal pos
+            out = raw[pos:pos + nbytes]
+            pos += nbytes
+            return out
+
+        applied = 0
+        ids_bt = take(8 * sb.log_bt).view(np.int64)
+        for n in layout.BT_PLANES:
+            rb = self._by_name[n].row_nbytes
+            rows = take(rb * sb.log_bt).reshape(sb.log_bt, rb)
+            self.rows(n).view(np.uint8).reshape(
+                self.log.bt_rows, -1)[ids_bt] = rows
+            applied += rows.nbytes
+        ids_nb = take(8 * sb.log_nb).view(np.int64)
+        for n in layout.NB_PLANES:
+            rb = self._by_name[n].row_nbytes
+            rows = take(rb * sb.log_nb).reshape(sb.log_nb, rb)
+            self.rows(n).view(np.uint8).reshape(
+                self.log.nb_rows, -1)[ids_nb] = rows
+            applied += rows.nbytes
+        if sb.log_routing:
+            for n in self._LOG_ROUTING:
+                s = self._by_name[n]
+                self._mm[s.offset:s.offset + s.nbytes] = take(s.nbytes)
+                applied += s.nbytes
+        return applied
+
+    def _log_used_bytes(self, sb: Superblock) -> int:
+        used = sb.log_bt * (8 + self.log.bt_row_nbytes) \
+            + sb.log_nb * (8 + self.log.nb_row_nbytes)
+        if sb.log_routing:
+            used += self.log.routing_nbytes
+        return used
+
+    # -- commit record -----------------------------------------------------
+
+    def _write_slot(self, slot: int, sb: Superblock):
+        enc = sb.encode()
+        self._mm[slot * SLOT_BYTES:slot * SLOT_BYTES + len(enc)] = \
+            np.frombuffer(enc, dtype=np.uint8)
+
+    def commit(self, gver: int, clean: bool, log_bt: int = 0, log_nb: int = 0,
+               log_routing: bool = False, log_crc: int = 0) -> int:
+        """Write the next superblock slot (flush_seq + 1) — the flush's
+        atomic commit point, carrying the redo-log descriptor. The caller
+        fences before (data + log durable first) and after (commit durable
+        before acknowledging). Returns the new sequence number."""
+        nxt = dataclasses.replace(self.sb, flush_seq=self.sb.flush_seq + 1,
+                                  gver=int(gver), clean=bool(clean),
+                                  log_bt=int(log_bt), log_nb=int(log_nb),
+                                  log_routing=bool(log_routing),
+                                  log_crc=int(log_crc))
+        self._write_slot(nxt.flush_seq % 2, nxt)
+        self.sb = nxt
+        return nxt.flush_seq
+
+    # -- state I/O ---------------------------------------------------------
+
+    def read_state(self) -> DashState:
+        """Materialize the pool's planes as a fresh ``DashState`` (device
+        arrays). The copy is bounded by the pool size — constant in the
+        number of stored keys for a fixed config, which is what keeps the
+        durable restart O(1) in data size."""
+        import jax.numpy as jnp
+        return DashState(**{s.name: jnp.asarray(np.array(self._views[s.name]))
+                            for s in self.specs})
+
+    def disk_plane(self, name: str) -> np.ndarray:
+        """Read-only host copy of one plane (diff/classification input)."""
+        return np.array(self._views[name])

@@ -1,0 +1,301 @@
+"""O(dirty) flush-on-publish: ordered dirty-plane writeback into the PM pool.
+
+``WritebackEngine.flush(state, hint)`` makes the live table state durable in
+bytes proportional to what changed since the last flush — the durable
+rendering of PR 4's O(dirty) COW publish. The dirty ground truth is the same:
+every plane mutation bumps its bucket's version word (core/bucket.py), so the
+diff of the live version plane against the POOL's version plane is a complete
+change record; the host ``DirtyTracker`` hint is audited against it
+(``flush_hint_misses``) and carries the force-full escape for paths outside
+the version discipline (crash simulation, pointer mode).
+
+**Crash consistency.** Every dirty bucket row is classified against the
+pool's current contents:
+
+  * **append** — the row only gains records; every slot the pool's meta word
+    claims keeps its exact key/fingerprint bytes. Normal inserts and
+    displacement destinations.
+  * **clear**  — the row loses alloc bits but surviving slots keep their
+    bytes. Deletes and displacement sources.
+  * **rebuilt** — some pool-allocated slot's key/fp bytes CHANGED: the
+    vectorized SMO rebuild (split source, merge keep, cleared merge victim)
+    relaid the segment. No store order makes an in-place rewrite of such a
+    row crash-atomic — old meta claims slots whose bytes a partial write
+    already scrambled — so rebuilt rows are staged through the pool's redo
+    log instead (PMDK's allocate-activate discipline, scoped to exactly the
+    rows that need it; in-place value updates stay in place — a torn value
+    is an in-flight op's indeterminacy, not a lost key).
+
+Stores are then ordered into fenced phases; a crash at ANY inter-store point
+leaves a pool in which every previously-acknowledged key is reachable (an op
+is acknowledged durable only after its flush's commit fence — in-flight ops
+of a torn flush may land partially, exactly like in-flight stores on PM):
+
+  1. append+clear rows: data planes (key/value/fp/ofp). New bytes land only
+     in slots the pool's meta words consider free — invisible until
+     published (the paper's record-then-CLWB-the-meta-word order, Alg. 2).
+  2. append rows: meta/ometa/version. Records become visible; nothing
+     becomes unreachable.
+  3. routing (directory, per-segment metadata, scalars incl. the LH
+     level/next word and the watermark) — in place ONLY when no rebuilt
+     rows exist this flush (a torn directory then mixes old/new 4-byte
+     entries, each routing to an intact segment); with rebuilt rows the
+     routing planes ride in the redo log so they flip together with the
+     rebuilt segments.
+  4. clear rows: meta/ometa/version. Only now can a record leave a row —
+     its displacement copy (if any) was published in phase 2. Acked deletes
+     of previous flushes stay deleted; this flush's deletes are unacked
+     until commit either way.
+  5. redo log: rebuilt rows (+ routing planes when any), one staged write.
+  6. commit — the superblock slot (flush_seq, clean marker, V, log
+     descriptor + CRC), fenced: the acknowledgment point.
+  7. apply the log to the home rows, fence. A crash inside the apply is
+     repaired at the next open: a committed log is re-applied idempotently
+     (absolute row contents).
+
+The emulated store granularity is one plane scatter between fences (a clwb
+train); ``inject_crash(after_ops)`` kills the engine after that many stores,
+which is what the crash-matrix test sweeps every cut point of. Per-store
+tearing WITHIN one scatter (real PM's finer failure model) is out of the
+emulation's store model — Dash's per-record fence protocol collapses into
+the phase ordering here.
+
+Recovery after a torn flush needs nothing new: the pool's superblock says
+dirty, reopen bumps V, and the existing per-segment lazy recovery
+(core/recovery.py) clears locks, dedupes the half-displaced records phases
+2/4 can leave behind, and rebuilds the overflow metadata.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core import layout
+from repro.core.epoch import DirtyHint
+from repro.core.layout import DashState
+
+from .pool import PmPool
+
+#: phase-1 record planes, in flush order (keys/values before anything that
+#: could publish them)
+DATA_BT = ("fp", "key_hi", "key_lo", "val")
+#: publish planes: the meta word is the visibility point; version is the
+#: dirty-diff ground truth and lands LAST so a torn row is re-flushed
+PUBLISH_BT = ("meta", "version")
+
+
+class SimulatedCrash(RuntimeError):
+    """Raised when an injected crash point is reached mid-flush; the engine
+    is dead afterwards (the process 'died' — reopen the pool to continue)."""
+
+
+def _slot_bits(meta_rows: np.ndarray, num_slots: int) -> np.ndarray:
+    """(n, num_slots) bool alloc matrix from packed meta words."""
+    alloc = layout.meta_alloc(meta_rows.astype(np.uint32))
+    return (alloc[:, None] >> np.arange(num_slots, dtype=np.uint32)) & 1 == 1
+
+
+class WritebackEngine:
+    """Flush-on-publish engine bound to one ``PmPool``.
+
+    Counters (the bench/test observability surface): ``flushes``,
+    ``flushed_bytes`` / ``last_flush_bytes`` (bytes actually written,
+    including the doubled cost of logged rebuilt rows), ``flushed_rows``,
+    ``logged_rows``, ``flush_seconds``, ``flush_hint_misses`` (device-dirty
+    segments the host tracker failed to report — should stay 0), and the
+    pool's ``fences``.
+    """
+
+    def __init__(self, pool: PmPool):
+        self.pool = pool
+        self.cfg = pool.cfg
+        self.mode = pool.mode
+        self.flushes = 0
+        self.flushed_bytes = 0
+        self.last_flush_bytes = 0
+        self.last_flush_rows = 0      # per-plane row writes of the last flush
+        self.last_dirty_rows = 0      # distinct dirty bucket rows last flush
+        self.flushed_rows = 0
+        self.logged_rows = 0
+        self.flush_seconds = 0.0
+        self.flush_hint_misses = 0
+        self._ops_budget: Optional[int] = None
+        self.dead = False
+
+    # -- crash injection ---------------------------------------------------
+
+    def inject_crash(self, after_ops: int):
+        """Die (raise ``SimulatedCrash``) after ``after_ops`` further
+        emulated stores; 0 dies before the next store lands."""
+        self._ops_budget = int(after_ops)
+
+    def _store(self):
+        """One emulated store op is about to land; the crash point sits
+        BEFORE it (the op that would exceed the budget never lands)."""
+        if self._ops_budget is not None:
+            if self._ops_budget <= 0:
+                self.dead = True
+                raise SimulatedCrash("injected crash mid-flush")
+            self._ops_budget -= 1
+
+    def _account(self, nbytes: int, rows: int = 0):
+        self.flushed_bytes += nbytes
+        self.last_flush_bytes += nbytes
+        self.flushed_rows += rows
+        self.last_flush_rows += rows
+
+    def _write_rows(self, name: str, ids: np.ndarray, live: np.ndarray):
+        if ids.size == 0:
+            return
+        self._store()
+        self._account(self.pool.write_rows(name, ids, live), ids.size)
+
+    def _write_plane(self, name: str, live: np.ndarray):
+        self._store()
+        self._account(self.pool.write_plane(name, live))
+
+    # -- the flush ---------------------------------------------------------
+
+    def flush(self, state: DashState, hint: Optional[DirtyHint] = None) -> int:
+        """Write every dirty plane of ``state`` to the pool in the fenced
+        phase order above; returns bytes written. O(dirty) I/O: row-granular
+        for the record planes (version diff vs the pool), compare-then-copy
+        for directory/segment metadata, always-copy for scalars."""
+        if self.dead:
+            raise SimulatedCrash("writeback engine died in a previous flush")
+        t0 = time.perf_counter()
+        self.last_flush_bytes = 0
+        self.last_flush_rows = 0
+        cfg = self.cfg
+        NB, BT, SL = cfg.num_buckets, cfg.buckets_total, cfg.num_slots
+
+        live = {n: np.asarray(getattr(state, n)) for n in DashState._fields}
+        full = (self.pool.sb.flush_seq == 0 or cfg.pointer_mode
+                or (hint is not None and hint.full))
+
+        # dirty rows = version-plane diff against the pool (the durable
+        # mirror of engine.changed_rows); force-full writes every row
+        disk_ver = self.pool.rows("version").reshape(-1)
+        live_ver = live["version"].reshape(-1)
+        if full:
+            ids_bt = np.arange(live_ver.size, dtype=np.int64)
+        else:
+            ids_bt = np.flatnonzero(disk_ver != live_ver).astype(np.int64)
+        seg_of = ids_bt // BT
+        b_of = ids_bt % BT
+        nb_mask = b_of < NB
+        ids_nb = (seg_of * NB + b_of)[nb_mask]
+        self.last_dirty_rows = int(ids_bt.size)
+
+        if hint is not None and not full and ids_bt.size:
+            seen = set(np.unique(seg_of).tolist())
+            self.flush_hint_misses += len(seen - hint.segments)
+
+        rowview = {n: live[n].reshape(self.pool.spec(n).rows, -1)
+                   for n in DATA_BT + PUBLISH_BT + layout.NB_PLANES}
+
+        # -- classification vs the pool's current contents -----------------
+        disk_bits = _slot_bits(self.pool.rows("meta").reshape(-1)[ids_bt], SL)
+        live_bits = _slot_bits(live["meta"].reshape(-1)[ids_bt], SL)
+        changed = np.zeros_like(disk_bits)
+        for n in ("key_hi", "key_lo"):
+            changed |= (self.pool.rows(n)[ids_bt]
+                        != live[n].reshape(-1, SL)[ids_bt])
+        # fp rows are lane-padded to 16; compare the record slots only
+        changed |= (self.pool.rows("fp")[ids_bt][:, :SL]
+                    != live["fp"].reshape(-1, 16)[ids_bt][:, :SL])
+        # any POOL-allocated slot with changed key/fp bytes forces the log:
+        # an in-place data store there would scramble a visible record even
+        # if the live row no longer keeps that slot
+        rebuilt = (disk_bits & changed).any(axis=1)
+        loses = (disk_bits & ~live_bits).any(axis=1)
+        a_bt = ids_bt[~rebuilt & ~loses]        # append rows
+        c_bt = ids_bt[~rebuilt & loses]         # clear rows
+        r_bt = ids_bt[rebuilt]                  # rebuilt rows -> redo log
+        a_nb = ids_nb[(~rebuilt & ~loses)[nb_mask]]
+        c_nb = ids_nb[(~rebuilt & loses)[nb_mask]]
+        r_nb = ids_nb[rebuilt[nb_mask]]
+
+        log_routing = r_bt.size > 0
+        routing_dirty = not log_routing and (full or any(
+            not np.array_equal(self.pool.plane(n), live[n])
+            for n in layout.DIR_PLANES + layout.SEG_META_PLANES))
+
+        # phase 1: data planes of the in-place rows (new bytes land only in
+        # pool-free slots — invisible until a publish word flips)
+        ip_bt = np.concatenate([a_bt, c_bt])
+        ip_nb = np.concatenate([a_nb, c_nb])
+        for n in DATA_BT:
+            self._write_rows(n, ip_bt, rowview[n])
+        self._write_rows("ofp", ip_nb, rowview["ofp"])
+        self.pool.fence()
+
+        # phase 2: publish the append rows
+        self._write_rows("meta", a_bt, rowview["meta"])
+        self._write_rows("ometa", a_nb, rowview["ometa"])
+        self._write_rows("version", a_bt, rowview["version"])
+        self.pool.fence()
+
+        # phase 3: routing + per-segment metadata + scalars, in place only
+        # when no rebuilt rows ride this flush (else they go via the log)
+        if not log_routing:
+            if routing_dirty:
+                for n in layout.DIR_PLANES + layout.SEG_META_PLANES:
+                    if full or not np.array_equal(self.pool.plane(n), live[n]):
+                        self._write_plane(n, live[n])
+            for n in layout.SCALAR_PLANES:
+                self._write_plane(n, live[n])
+            self.pool.fence()
+
+        # phase 4: clear rows — records may leave, their displacement copies
+        # (if any) are already published
+        self._write_rows("meta", c_bt, rowview["meta"])
+        self._write_rows("ometa", c_nb, rowview["ometa"])
+        self._write_rows("version", c_bt, rowview["version"])
+        self.pool.fence()
+
+        # phase 5: stage rebuilt rows (+ routing) in the redo log
+        log_bt = log_nb = 0
+        log_crc = 0
+        if log_routing:
+            self._store()
+            nbytes, log_crc = self.pool.write_log(r_bt, r_nb, True, live)
+            self._account(nbytes, r_bt.size)
+            self.logged_rows += int(r_bt.size)
+            log_bt, log_nb = int(r_bt.size), int(r_nb.size)
+            self.pool.fence()
+
+        # phase 6: commit record (acknowledgment point)
+        self._store()
+        self.pool.commit(gver=int(live["gver"]), clean=bool(live["clean"]),
+                         log_bt=log_bt, log_nb=log_nb,
+                         log_routing=log_routing, log_crc=log_crc)
+        self.pool.fence()
+
+        # phase 7: apply the committed log to the home rows (idempotent —
+        # a crash inside the apply is redone at the next open)
+        if log_routing:
+            self._store()
+            self._account(self.pool.apply_log())
+            self.pool.fence()
+
+        self.flushes += 1
+        self.flush_seconds += time.perf_counter() - t0
+        return self.last_flush_bytes
+
+    def stats(self) -> dict:
+        return {
+            "flushes": self.flushes,
+            "flushed_bytes": self.flushed_bytes,
+            "last_flush_bytes": self.last_flush_bytes,
+            "flushed_rows": self.flushed_rows,
+            "last_dirty_rows": self.last_dirty_rows,
+            "logged_rows": self.logged_rows,
+            "flush_seconds": self.flush_seconds,
+            "flush_hint_misses": self.flush_hint_misses,
+            "fences": self.pool.fences,
+            "pool_bytes": self.pool.plane_bytes,
+            "flush_seq": self.pool.sb.flush_seq,
+        }

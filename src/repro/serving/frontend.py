@@ -186,11 +186,15 @@ class FrontendBase:
 
     def stats(self) -> dict:
         """One observability surface (benches + tests): the registry's
-        copy-on-write publish counters plus the read-path snapshot/retry
-        split."""
+        copy-on-write publish counters, the read-path snapshot/retry split,
+        and — when a durable pool is attached — the writeback's flush
+        counters."""
         out = self.registry.stats()
         out["snapshot_reads"] = self.snapshot_reads
         out["retried_reads"] = self.retried_reads
+        wb = getattr(getattr(self, "table", None), "writeback", None)
+        if wb is not None:
+            out.update(wb.stats())
         return out
 
     def _finish_reads(self, ops: List[Op], found, vals, n_changed: int):
@@ -273,19 +277,39 @@ class DashFrontend(FrontendBase):
         """Install the live state as the next published version in O(dirty)
         bytes: the COW publish scatters only version-changed bucket rows and
         aliases untouched planes (core/epoch.py). The table's host-side
-        dirty tracker is drained alongside (audited against the device
-        ground truth; it also carries the force-full escape after
-        crash/restart). Superseded versions retire through the epoch
-        manager; their planes are freed only when no newer version aliases
-        them."""
+        dirty tracker is drained ONCE and feeds both consumers (audited
+        against the device ground truth; it also carries the force-full
+        escape after crash/restart). Superseded versions retire through the
+        epoch manager; their planes are freed only when no newer version
+        aliases them.
+
+        Flush-on-publish: with a durable pool attached (persist/), the same
+        dirty hint drives the pool writeback right after the publish — an
+        op acknowledged by this frontend is durable, and the flush volume
+        tracks the publish volume (both are O(dirty bucket rows))."""
+        hint = self.table.dirty.drain()
         self.registry.publish_cow(self.cfg, self.table.state,
-                                  dirty_hint=self.table.dirty.drain())
+                                  dirty_hint=hint)
+        if self.table.writeback is not None:
+            self.table.writeback.flush(self.table.state, hint)
         self._dirty = False
 
     # -- read lane ---------------------------------------------------------
 
     def _serve_reads(self, ops: List[Op]):
         hi, lo = _keys_arrays(ops, pad_to=self.former.max_batch)
+        if self.table.lazy_recovery:
+            # lazy per-segment recovery hooks the READ path too (Sec. 4.8):
+            # after a dirty restart the frontend serves immediately and the
+            # touched segments recover here; the verify pass below then
+            # retries the recovered buckets on the live version (recovery
+            # bumps their version words), so results are never served from
+            # unrecovered state. No-op (one np gather) on recovered tables.
+            before = self.table.recovered_segments
+            self.table._ensure_recovered(self.table._segments_of(
+                np.asarray(hi)[:len(ops)], np.asarray(lo)[:len(ops)]))
+            if self.table.recovered_segments != before:
+                self._dirty = True
         with self.registry.acquire() as snap:
             found, vals = dash_engine.search_batch(
                 self.cfg, self.mode, snap.state, hi, lo, batching="auto")
@@ -411,6 +435,9 @@ class StopTheWorldFrontend(FrontendBase):
 
     def _serve_reads(self, ops: List[Op]):
         hi, lo = _keys_arrays(ops, pad_to=self.former.max_batch)
+        if self.table.lazy_recovery:
+            self.table._ensure_recovered(self.table._segments_of(
+                np.asarray(hi)[:len(ops)], np.asarray(lo)[:len(ops)]))
         found, vals = dash_engine.search_batch(
             self.cfg, self.mode, self.table.state, hi, lo, batching="auto")
         self._finish_reads(ops, np.asarray(found), np.asarray(vals), 0)

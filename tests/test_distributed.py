@@ -188,3 +188,47 @@ def test_compressed_psum_over_pod_axis():
         print("COMPRESS OK", err)
     """)
     assert "COMPRESS OK" in out
+
+
+def test_dht_durable_shard_pools(tmp_path):
+    """One durable pool per shard under the real 8-device shard_map path:
+    insert through the DHT, flush every shard's pool, 'kill' the process
+    (subprocess exits), then a SECOND subprocess reopens the pools into a
+    fresh DistributedDash and every acknowledged key is found."""
+    d = str(tmp_path / "shards")
+    common = f"""
+        import numpy as np
+        from repro.core import DashConfig
+        from repro.distributed import DistributedDash
+        from repro.launch.mesh import make_test_mesh
+        from repro import persist
+        cfg = DashConfig(max_segments=32, dir_depth_max=8)
+        mesh = make_test_mesh(2, 4)
+        rng = np.random.default_rng(5)
+        keys = np.unique(rng.integers(1, 2**63, 8000, dtype=np.uint64))[:3000]
+        vals = np.arange(3000, dtype=np.uint32) % 1000 + 1
+    """
+    run_sub(common + f"""
+        d = DistributedDash(cfg, mesh, axes=("data", "model"), capacity=256)
+        d.attach_pools(persist.create_shard_pools({d!r}, cfg, d.n_shards))
+        st = d.insert(keys, vals)
+        assert (st == 0).all()
+        n = d.flush_pools()
+        print("WRITER OK", d.n_items, "flushed", n)
+    """)
+    out = run_sub(common + f"""
+        stacked, wbs, info = persist.reopen_shards({d!r})
+        assert info["n_shards"] == 8 and info["dirty_shards"] == 8
+        d = DistributedDash(cfg, mesh, axes=("data", "model"), capacity=256,
+                            state=stacked)
+        d.attach_pools(wbs)
+        f, v = d.search(keys)
+        assert f.all() and (v == vals).all()
+        assert d.n_items == 3000
+        d.close_pools()
+        # clean reopen after close: no shard recovers
+        stacked2, wbs2, info2 = persist.reopen_shards({d!r})
+        assert info2["dirty_shards"] == 0
+        print("REOPEN OK", int(f.sum()))
+    """)
+    assert "REOPEN OK 3000" in out
