@@ -1,0 +1,190 @@
+"""Chaos matrix benchmark: the >=200-seeded-schedule safety evidence, scrub
+detection latency, and degraded-mode serving throughput.
+
+Gated measurements (asserted before the artifact is written):
+
+  * **matrix** — ``N_SCHEDULES`` (default 200, ``DASH_CHAOS_SCHEDULES`` to
+    override) seeded fault schedules through ``repro.persist.chaos``: torn
+    msyncs, bit rot, transient EIO bursts, ENOSPC rehearsals, crash + clean
+    restarts, scrub ticks, pointer-mode lineages. ZERO wrong reads and ZERO
+    silently-lost acked keys (``run_schedule`` additionally asserts the
+    safety property per schedule; this gate re-checks the aggregate).
+  * **scrub latency** — a planted media flip is detected AND repaired in
+    place by the background scrubber within ONE full pass of the pool
+    (``rows_total / rows_per_tick`` ticks); the pool verifies clean after.
+  * **degraded serving** — with the flush path hard-failed the frontend
+    keeps serving (health DEGRADED, volatile): every key inserted before
+    and during the outage reads back, and ``try_recover`` restores HEALTHY
+    once the fault clears. Healthy vs degraded throughput is recorded.
+
+Emits ``BENCH_chaos.json``.
+"""
+from __future__ import annotations
+
+import math
+import os
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro import persist
+from repro.core import DashConfig
+from repro.persist import chaos
+from repro.persist.faults import FaultPlan
+from repro.persist.writeback import Scrubber
+from repro.serving import frontend as fe_mod
+from repro.serving.frontend import INSERT, READ, DashFrontend, Op
+from .common import Row, enable_compilation_cache, unique_keys, write_artifact
+
+ARTIFACT = "BENCH_chaos.json"
+
+N_SCHEDULES = int(os.environ.get("DASH_CHAOS_SCHEDULES", "200"))
+SEED_BASE = 1000
+SCRUB_TRIALS = 4
+SCRUB_ROWS_PER_TICK = 64
+TP_BATCHES = 8
+TP_BATCH = 256
+
+
+def _matrix(tmp: str) -> dict:
+    t0 = time.perf_counter()
+    agg = chaos.run_many(range(SEED_BASE, SEED_BASE + N_SCHEDULES), tmp,
+                         min_tears=1, min_flips=1)
+    agg["seconds"] = time.perf_counter() - t0
+    return agg
+
+
+def _scrub(tmp: str) -> dict:
+    """Plant seeded flips on a live pool and count scrubber ticks until the
+    first detection; finish the pass and verify the pool healed."""
+    path = os.path.join(tmp, "scrub.pool")
+    t = persist.create(path, chaos.CHAOS_CFG)
+    rng = np.random.default_rng(11)
+    t.insert(unique_keys(rng, 600), np.arange(600, dtype=np.uint32) + 1)
+    t.flush()
+    wb = t.writeback
+    trials = []
+    for i in range(SCRUB_TRIALS):
+        sc = Scrubber(wb, rows_per_tick=SCRUB_ROWS_PER_TICK)
+        bound = math.ceil(sc.rows_total / SCRUB_ROWS_PER_TICK)
+        FaultPlan(seed=70 + i).flip_bits(wb.pool, n=2)
+        ticks, tick_s = 0, []
+        while sc.mismatched_rows == 0:
+            ticks += 1
+            assert ticks <= bound, "flip not detected within one full pass"
+            t1 = time.perf_counter()
+            sc.tick(t.state)
+            tick_s.append(time.perf_counter() - t1)
+        assert sc.repaired_rows >= 1
+        while sc.cycles == 0:          # repair any second flip this pass
+            sc.tick(t.state)
+        bad = wb.pool.verify_checksums()
+        assert bad["bt"].size == 0 and bad["nb"].size == 0
+        trials.append({"ticks_to_detect": ticks, "bound_ticks": bound,
+                       "tick_seconds": float(np.mean(tick_s))})
+    wb.pool.close()
+    worst = max(tr["ticks_to_detect"] for tr in trials)
+    return {"trials": trials, "rows_per_tick": SCRUB_ROWS_PER_TICK,
+            "worst_ticks_to_detect": worst,
+            "bound_ticks": trials[0]["bound_ticks"],
+            "mean_tick_seconds": float(np.mean(
+                [tr["tick_seconds"] for tr in trials]))}
+
+
+def _degraded(tmp: str) -> dict:
+    """Healthy vs degraded-mode serving throughput through the frontend."""
+    cfg = DashConfig(max_segments=64, dir_depth_max=9)
+    plan = FaultPlan(seed=5)
+    path = os.path.join(tmp, "deg.pool")
+    t = persist.create(path, cfg, faults=plan)
+    rng = np.random.default_rng(12)
+    keys = unique_keys(rng, (TP_BATCHES * 2 + 4) * TP_BATCH)
+    fe = DashFrontend(t, max_batch=TP_BATCH, queue_depth=1 << 16)
+    cursor = 0
+
+    def pump(n_batches: int) -> float:
+        nonlocal cursor
+        served, t0 = 0, time.perf_counter()
+        for _ in range(n_batches):
+            ks = keys[cursor:cursor + TP_BATCH]
+            cursor += TP_BATCH
+            ops = [Op(INSERT, int(k), 1) for k in ks]
+            for op in ops:
+                assert fe.submit(op)
+            fe.drain()
+            served += len(ops)
+        return served / (time.perf_counter() - t0)
+
+    pump(4)                                    # compile + settle
+    healthy = pump(TP_BATCHES)
+    assert fe.health == fe_mod.HEALTHY
+    plan.eio_fences[plan.fence_calls] = 1 << 30   # device fails hard
+    degraded = pump(TP_BATCHES)
+    assert fe.health == fe_mod.DEGRADED
+    stats = fe.stats()
+    # every key inserted before AND during the outage still serves
+    probe = rng.choice(keys[:cursor], 512, replace=False)
+    ops = [Op(READ, int(k)) for k in probe]
+    for op in ops:
+        assert fe.submit(op)
+    fe.drain()
+    assert all(op.found for op in ops)
+    plan.eio_fences.clear()
+    assert fe.try_recover()
+    assert fe.health == fe_mod.HEALTHY
+    t.writeback.pool.close()
+    return {"healthy_ops_per_s": healthy, "degraded_ops_per_s": degraded,
+            "ratio": degraded / healthy,
+            "unflushed_publishes": int(stats.get("unflushed_publishes", 0)),
+            "flush_io_errors": int(stats.get("flush_io_errors", 0))}
+
+
+def run():
+    enable_compilation_cache()
+    rows = []
+    report = {"config": {"n_schedules": N_SCHEDULES,
+                         "seed_base": SEED_BASE}}
+    tmp = tempfile.mkdtemp(prefix="dash_chaos_")
+    try:
+        agg = _matrix(tmp)
+        report["matrix"] = agg
+        assert agg["schedules"] == N_SCHEDULES
+        assert agg["wrong_reads"] == 0, agg
+        assert agg["silent_lost"] == 0, agg
+        assert agg["tears"] >= N_SCHEDULES and agg["flips"] >= N_SCHEDULES
+        assert agg["crashes"] > 0 and agg["eio_raised"] > 0
+        rows.append(Row("chaos/schedules", agg["schedules"],
+                        f"tears={agg['tears']} flips={agg['flips']} "
+                        f"crashes={agg['crashes']} eio={agg['eio_raised']} "
+                        f"wrong=0 silent_lost=0"))
+        rows.append(Row("chaos/seconds_per_schedule",
+                        agg["seconds"] / max(agg["schedules"], 1),
+                        f"{agg['seconds']:.1f}s total, "
+                        f"reported_lost={agg['reported_lost']} "
+                        f"pending={agg['indeterminate_pending']}"))
+
+        scrub = _scrub(tmp)
+        report["scrub"] = scrub
+        rows.append(Row("chaos/scrub_detect_ticks", scrub[
+            "worst_ticks_to_detect"],
+            f"bound={scrub['bound_ticks']} ticks/pass, "
+            f"{scrub['mean_tick_seconds'] * 1e3:.2f}ms/tick"))
+
+        deg = _degraded(tmp)
+        report["degraded"] = deg
+        rows.append(Row("chaos/degraded_throughput_ratio", deg["ratio"],
+                        f"{deg['degraded_ops_per_s']:.0f} vs "
+                        f"{deg['healthy_ops_per_s']:.0f} ops/s "
+                        f"({deg['unflushed_publishes']} volatile acks)"))
+
+        write_artifact(ARTIFACT, report)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r.csv())

@@ -1,7 +1,7 @@
 """Paper Table 1, measured END-TO-END through the durable serving stack:
 restart cost vs data size with a real pool file surviving the process.
 
-Three gated measurements (asserted before the artifact is written):
+Four gated measurements (asserted before the artifact is written):
 
   * **ttfq** — time-to-first-served-query after a DIRTY ``persist.reopen``:
     map the pool, instant restart (read clean marker, bump V), build a
@@ -15,6 +15,9 @@ Three gated measurements (asserted before the artifact is written):
     tracking. Per-batch flush bytes are recorded next to the COW publish
     bytes (they track: both are O(dirty bucket rows); rebuilt SMO rows pay
     the 2x redo-log factor).
+  * **checksummed reopen** — ``persist.reopen(verify=True)`` (the default:
+    recompute every record row's checksum before serving) must cost <= 1.5x
+    a ``verify=False`` reopen of the same pool (min of 3 trials each).
   * **torn crash** — a flush killed at several injection points must reopen
     to a pool where every PREVIOUSLY-acknowledged key is found (the full
     every-cut-point matrix runs in tests/test_persist.py).
@@ -140,6 +143,23 @@ def _storm(tmp: str):
     }
 
 
+def _verify_cost(path: str):
+    """Checksummed vs unchecked reopen on the same pool file: ``verify=True``
+    recomputes every record row's checksum against the checksum region (one
+    vectorized O(pool) scan) before serving. Min of 3 trials each; the
+    acceptance gate bounds the overhead at 1.5x a plain reopen."""
+    times = {True: [], False: []}
+    for _ in range(3):
+        for verify in (False, True):
+            t0 = time.perf_counter()
+            table, _ = persist.reopen(path, verify=verify)
+            times[verify].append(time.perf_counter() - t0)
+            table.writeback.pool.close()
+    plain, checked = min(times[False]), min(times[True])
+    return {"reopen_plain_s": plain, "reopen_verify_s": checked,
+            "ratio": checked / max(plain, 1e-9)}
+
+
 def _torn(tmp: str):
     """A handful of torn-flush injection points over an SMO-heavy batch;
     every acked key must survive each reopen."""
@@ -215,6 +235,13 @@ def run():
         spread = max(ttfqs.values()) / min(ttfqs.values())
         report["ttfq_spread"] = spread
 
+        vc = _verify_cost(os.path.join(tmp, f"t{max(SIZES)}.pool"))
+        report["checksummed_reopen"] = vc
+        rows.append(Row("durable/checksummed_reopen_ratio", vc["ratio"],
+                        f"verify={vc['reopen_verify_s'] * 1e3:.1f}ms vs "
+                        f"plain={vc['reopen_plain_s'] * 1e3:.1f}ms "
+                        "(gate <= 1.5)"))
+
         storm = _storm(tmp)
         report["storm"] = storm
         rows.append(Row("durable/flush_volume_ratio",
@@ -234,6 +261,8 @@ def run():
         assert storm["volume_ratio"] <= 0.25, \
             f"flush volume ratio {storm['volume_ratio']:.3f} > 0.25"
         assert storm["flush_hint_misses"] == 0
+        assert vc["ratio"] <= 1.5, \
+            f"checksummed reopen {vc['ratio']:.2f}x > 1.5x plain reopen"
         rows.append(Row("durable/ttfq_spread", spread,
                         "max/min ttfq across 5k..60k (gate <= 2.0)"))
         write_artifact(ARTIFACT, report)

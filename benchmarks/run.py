@@ -23,6 +23,8 @@ Modules map 1:1 to the paper's artifacts:
   extra  smo                  bulk vs scalar split/merge SMOs (+ JSON artifact)
   extra  online_resize        frontend vs stop-the-world p50/p99 during a
                               split storm (+ JSON artifact)
+  extra  chaos                >=200-seed fault matrix + scrub latency +
+                              degraded-mode throughput (+ JSON artifact)
 """
 from __future__ import annotations
 
@@ -50,6 +52,7 @@ MODULES = [
     ("batchpar", "benchmarks.batch_parallel"),
     ("smo", "benchmarks.smo"),
     ("resize", "benchmarks.online_resize"),
+    ("chaos", "benchmarks.chaos"),
 ]
 
 

@@ -9,6 +9,9 @@
 #   4. durable smoke           (write -> KILL the process -> reopen in a
 #                               fresh process; the persistence contract is
 #                               checked across a real process boundary)
+#   5. chaos smoke             (one seeded fault schedule: forced torn
+#                               persist + bit flips + crash reopen; zero
+#                               wrong reads / silent losses, <~30s)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -60,6 +63,17 @@ assert info2["clean"]
 f2, _ = t2.search(keys[:256])
 assert f2.all() and t2.recovered_segments == 0
 print(f"durable smoke OK: {int(f.sum())} keys survived the kill")
+PY
+
+echo "== chaos smoke (torn persist + bit rot + crash reopen) =="
+python - "$SMOKE_DIR" <<'PY'
+import sys
+from repro.persist import chaos
+r = chaos.run_schedule(7, sys.argv[1], min_tears=1, min_flips=3)
+assert r.wrong_reads == 0 and r.silent_lost == 0   # run_schedule asserts too
+assert r.tears >= 1 and r.flips >= 3 and r.crashes >= 1
+print(f"chaos smoke OK: seed={r.seed} ops={r.ops} tears={r.tears} "
+      f"flips={r.flips} crashes={r.crashes} reported_lost={r.reported_lost}")
 PY
 
 echo "CI OK"

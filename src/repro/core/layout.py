@@ -316,6 +316,18 @@ assert set(BT_PLANES + NB_PLANES + SEG_META_PLANES + DIR_PLANES
            + SCALAR_PLANES) == set(DashState._fields)
 
 
+def log_routing_planes(cfg: DashConfig) -> tuple:
+    """Planes a logged commit snapshots whole. The pointer-mode key heap
+    is exempt: it is append-only and the writeback makes its tail durable
+    in phase 1, before any handle publishes, so it needs no log atomicity
+    — keeping it out keeps SMO-logged flushes O(dirty + heap-tail)
+    instead of O(heap)."""
+    planes = DIR_PLANES + SEG_META_PLANES + SCALAR_PLANES
+    if cfg.pointer_mode:
+        planes = tuple(n for n in planes if n != "key_heap")
+    return planes
+
+
 def state_nbytes(state: DashState) -> int:
     """Total device bytes of one table version — the whole-state copy cost a
     publish would pay without COW (the benchmark's baseline volume)."""
@@ -335,6 +347,14 @@ def state_nbytes(state: DashState) -> int:
 
 POOL_ALIGN = 64            # emulated PM line (clwb granularity)
 SUPERBLOCK_BYTES = 4096    # two checksummed superblock slots live here
+
+#: record planes protected by the pool's per-row checksum region (PR 6):
+#: every bucket-row store writes its row bytes AND its uint32 checksum in the
+#: same emulated store op, so checksums stay consistent at every store
+#: boundary of the crash matrix — only sub-store media faults (torn
+#: cachelines, bit rot) can desynchronize them, which is exactly the signal
+#: reopen verification and the background scrubber quarantine on.
+CSUM_PLANES = BT_PLANES + NB_PLANES
 
 
 @dataclasses.dataclass(frozen=True)
@@ -419,11 +439,61 @@ class LogLayout:
         return (self.routing_offset - self.offset) + self.routing_nbytes
 
 
+@dataclasses.dataclass(frozen=True)
+class ChecksumLayout:
+    """The pool's per-row checksum region (PR 6, between the redo log and
+    the planes): one ``uint32`` content checksum per bucket row of every
+    ``CSUM_PLANES`` plane, stored per-plane (so a row store updates exactly
+    one word) in ``CSUM_PLANES`` order. An all-zero row checksums to 0, so
+    a freshly zero-filled pool verifies clean without initialization."""
+    offset: int
+    entries: tuple             # ((plane_name, file_offset, rows), ...)
+    nbytes: int
+
+    def offset_of(self, name: str) -> int:
+        for n, off, _ in self.entries:
+            if n == name:
+                return off
+        raise KeyError(name)
+
+    def rows_of(self, name: str) -> int:
+        for n, _, rows in self.entries:
+            if n == name:
+                return rows
+        raise KeyError(name)
+
+
+_CSUM_MULT = np.uint32(2654435761)  # Knuth's multiplicative constant
+
+
+def np_row_checksum(rows: np.ndarray) -> np.ndarray:
+    """Vectorized per-row content checksum: ``(n_rows, ...) -> (n_rows,)``
+    uint32. Each u32 word is weighted by a distinct odd multiplier (so
+    word-position swaps and torn-cacheline reverts change the sum), summed
+    mod 2**32, then avalanched. Orders of magnitude faster than per-row
+    ``zlib.crc32`` — it is on reopen's critical path for every row of every
+    record plane — while still catching single-bit rot and torn lines.
+    Zero rows hash to 0 by construction (see ChecksumLayout)."""
+    a = np.ascontiguousarray(rows)
+    n = a.shape[0]
+    u8 = a.view(np.uint8).reshape(n, -1)
+    assert u8.shape[1] % 4 == 0, "plane rows are u32-multiple sized"
+    w = u8.view(np.uint32) if u8.flags.c_contiguous else \
+        np.ascontiguousarray(u8).view(np.uint32)
+    mult = (_CSUM_MULT * (np.arange(w.shape[1], dtype=np.uint32)
+                          + np.uint32(1))) | np.uint32(1)
+    h = (w * mult[None, :]).sum(axis=1, dtype=np.uint64).astype(np.uint32)
+    h ^= h >> np.uint32(16)
+    h *= np.uint32(0x45D9F3B)
+    h ^= h >> np.uint32(16)
+    return h
+
+
 def pool_plane_specs(cfg: DashConfig, mode: str = "eh"):
-    """``(specs, log, total_bytes)``: the plane→file-offset map of a pool
-    holding one table of this config, shapes derived abstractly (no
-    allocation). File layout: superblock | redo log | plane regions in
-    ``DashState._fields`` order, each 64-aligned."""
+    """``(specs, log, csum, total_bytes)``: the plane→file-offset map of a
+    pool holding one table of this config, shapes derived abstractly (no
+    allocation). File layout: superblock | redo log | per-row checksums |
+    plane regions in ``DashState._fields`` order, each 64-aligned."""
     import jax
 
     def _align(n):
@@ -442,20 +512,27 @@ def pool_plane_specs(cfg: DashConfig, mode: str = "eh"):
         bt_rows=bt_rows, nb_rows=nb_rows,
         bt_row_nbytes=sum(raw[n].row_nbytes for n in BT_PLANES),
         nb_row_nbytes=sum(raw[n].row_nbytes for n in NB_PLANES),
-        routing_nbytes=sum(raw[n].nbytes for n in
-                           DIR_PLANES + SEG_META_PLANES + SCALAR_PLANES))
+        routing_nbytes=sum(raw[n].nbytes for n in log_routing_planes(cfg)))
+    coff = _align(SUPERBLOCK_BYTES + log.nbytes)
+    centries = []
+    off = coff
+    for name in CSUM_PLANES:
+        rows = raw[name].rows
+        centries.append((name, off, rows))
+        off += _align(rows * 4)
+    csum = ChecksumLayout(offset=coff, entries=tuple(centries),
+                          nbytes=off - coff)
     specs = []
-    off = _align(SUPERBLOCK_BYTES + log.nbytes)
     for name in DashState._fields:
         spec = dataclasses.replace(raw[name], offset=off)
         specs.append(spec)
         off += _align(spec.nbytes)
-    return tuple(specs), log, off
+    return tuple(specs), log, csum, off
 
 
 def pool_nbytes(cfg: DashConfig, mode: str = "eh") -> int:
     """Plane-region bytes of one pool — the whole-pool rewrite cost a flush
     would pay without dirty tracking (the durable benchmark's baseline
     volume; the sparse redo-log capacity is excluded on purpose)."""
-    specs, _, _ = pool_plane_specs(cfg, mode)
+    specs, _, _, _ = pool_plane_specs(cfg, mode)
     return sum(s.nbytes for s in specs)

@@ -197,6 +197,115 @@ def recover_all(cfg: DashConfig, mode: str, state: DashState):
 
 
 # ---------------------------------------------------------------------------
+# media-fault quarantine (PR 6): checksum-failing pool rows at reopen
+# ---------------------------------------------------------------------------
+
+def quarantine_rows(cfg: DashConfig, mode: str, state: DashState,
+                    disk_version: np.ndarray,
+                    bt_rows: np.ndarray, nb_rows: np.ndarray):
+    """Host-side surgery after ``PmPool.verify_checksums`` flagged rows at
+    reopen. The redo-log path has already rebuilt everything it could
+    (``apply_log`` runs before verification and heals both data and
+    checksums of every committed-logged row), so a row that still fails
+    here has no durable recourse — we refuse to serve its bytes:
+
+      * a **BT row** (bucket: records + publish words) is cleared — its
+        meta word is zeroed so no slot is served — and every record it
+        held is *explicitly lost*: the row goes into the returned report
+        (the never-a-wrong-read half of the safety property; the
+        lost-keys half is the report itself).
+      * an **NB row** (overflow metadata) forces a metadata rebuild only:
+        ometa/ofp are derived from stash contents, so zeroing them loses
+        no keys — lazy recovery reconstructs them.
+
+    Affected segments are marked for lazy recovery (``seg_version = 0``
+    never matches ``gver >= 1``) and the quarantined rows' bucket version
+    words (for NB rows: the bucket the overflow metadata belongs to) are
+    set off the POOL's stored word, so the next flush rewrites the row
+    (and its checksum) — quarantine self-heals on flush.
+
+    Returns ``(state, report)``; report entries are dicts with ``plane``
+    ("bt" / "nb"), ``seg``, ``bucket``, ``row``, and for BT rows the
+    cleared record count (``lost_records``)."""
+    BT, NB = cfg.buckets_total, cfg.num_buckets
+    report = []
+    segs = set()
+    lost_records = 0
+    if len(bt_rows):
+        meta = np.asarray(state.meta).copy()
+        version = np.asarray(state.version).copy()
+        disk_v = np.asarray(disk_version).reshape(-1)
+        for r in np.asarray(bt_rows).reshape(-1):
+            r = int(r)
+            s, b = r // BT, r % BT
+            n_rec = int((meta[s, b] >> layout.COUNT_SHIFT) & 0xF)
+            lost_records += n_rec
+            meta[s, b] = 0
+            # differs from the pool's word by construction, lock bit clear
+            version[s, b] = np.uint32((int(disk_v[r]) + 2) & ~1)
+            segs.add(s)
+            report.append({"plane": "bt", "seg": s, "bucket": b, "row": r,
+                           "lost_records": n_rec})
+        n_items = max(0, int(np.asarray(state.n_items)) - lost_records)
+        state = state._replace(meta=jnp.asarray(meta),
+                               version=jnp.asarray(version),
+                               n_items=jnp.asarray(n_items, jnp.int32))
+    if len(nb_rows):
+        ometa = np.asarray(state.ometa).copy()
+        ofp = np.asarray(state.ofp).copy()
+        version = np.asarray(state.version).copy()
+        disk_v = np.asarray(disk_version).reshape(-1)
+        for r in np.asarray(nb_rows).reshape(-1):
+            r = int(r)
+            s, b = r // NB, r % NB
+            ometa[s, b] = 0
+            ofp[s, b] = 0
+            # NB rows ride their bucket's version diff in the writeback:
+            # force the bucket dirty so the next flush rewrites ometa/ofp
+            # (and their checksums) even when the records were untouched
+            version[s, b] = np.uint32((int(disk_v[s * BT + b]) + 2) & ~1)
+            segs.add(s)
+            report.append({"plane": "nb", "seg": s, "bucket": b, "row": r})
+        state = state._replace(ometa=jnp.asarray(ometa),
+                               ofp=jnp.asarray(ofp),
+                               version=jnp.asarray(version))
+    if segs:
+        seg_version = np.asarray(state.seg_version).copy()
+        seg_version[sorted(segs)] = 0
+        state = state._replace(seg_version=jnp.asarray(seg_version))
+    return state, report
+
+
+def heap_top_floor(cfg: DashConfig, state: DashState) -> DashState:
+    """Pointer-mode reopen guard: raise ``heap_top`` past the highest heap
+    handle any live record references.
+
+    A flush dies between its publish fence (phase 2: meta rows, record
+    visible) and its scalar/log commit (phase 3+), leaving published
+    records whose bump-allocated handles exceed the durable ``heap_top``.
+    Their heap ROWS are durable — the writeback places the heap tail in
+    phase 1, before any handle publishes — but a reopen that trusted the
+    stale scalar would hand those rows out again and silently corrupt the
+    acked records pointing at them. Runs AFTER ``quarantine_rows``:
+    quarantined rows have their meta zeroed, so a torn handle word can
+    never inflate the floor."""
+    if not cfg.pointer_mode or cfg.key_heap_size <= 0:
+        return state
+    meta = np.asarray(state.meta)
+    alloc = np.asarray(layout.meta_alloc(meta), np.uint32)
+    mask = ((alloc[..., None] >> np.arange(cfg.num_slots, dtype=np.uint32))
+            & np.uint32(1)).astype(bool)
+    handles = np.asarray(state.key_lo)[mask]
+    floor = int(handles.max()) + 1 if handles.size else 0
+    floor = min(floor, cfg.key_heap_size)
+    top = np.asarray(state.heap_top)
+    if floor > int(top):
+        state = state._replace(
+            heap_top=jnp.asarray(np.asarray(floor, top.dtype)))
+    return state
+
+
+# ---------------------------------------------------------------------------
 # crash simulation (host-side, numpy surgery on the state)
 # ---------------------------------------------------------------------------
 

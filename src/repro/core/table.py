@@ -116,6 +116,7 @@ class DashTable:
         self.free_segments: list = []  # merged-away ids, recycled by splits
         self.dirty = DirtyTracker()   # dirty planes since the last publish
         self.writeback = None         # durable PM-pool engine (persist/)
+        self.lost_report: list = []   # quarantined rows from a verified reopen
 
     # -- key plumbing --------------------------------------------------------
 

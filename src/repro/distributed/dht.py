@@ -202,10 +202,27 @@ class DistributedDash:
 
     def flush_pools(self) -> int:
         """Flush every shard into its own pool (O(dirty) per shard: each
-        shard's version-plane diff runs against its own pool mirror)."""
+        shard's version-plane diff runs against its own pool mirror).
+        Fault isolation: a shard whose pool degrades (I/O retry budget
+        exhausted) is skipped — the OTHER shards still flush — and the
+        degraded shard keeps serving from device state until
+        ``recover_pools`` brings its pool back."""
         from repro import persist
         assert self.writebacks is not None, "no pools attached"
         return persist.flush_shards(self.state, self.writebacks)
+
+    def recover_pools(self) -> int:
+        """Probe every degraded shard pool and force-resync the ones that
+        answer (``persist.recover_shards``). Returns shards recovered."""
+        from repro import persist
+        assert self.writebacks is not None, "no pools attached"
+        return persist.recover_shards(self.state, self.writebacks)
+
+    def degraded_shards(self) -> list:
+        """Indices of shards whose pools are currently degraded."""
+        if self.writebacks is None:
+            return []
+        return [i for i, wb in enumerate(self.writebacks) if wb.degraded]
 
     def close_pools(self):
         """Durable clean shutdown of every shard pool."""
@@ -352,6 +369,13 @@ class ShardFrontend(frontend.FrontendBase):
         self.registry.publish_cow(self.dht.cfg, self.dht.state)
         if self.dht.writebacks is not None:
             self.dht.flush_pools()
+            if self.dht.degraded_shards():
+                if self.health == frontend.HEALTHY:
+                    self.health = frontend.DEGRADED
+                    self.degraded_events += 1
+                self.unflushed_publishes += 1
+            elif self.health == frontend.DEGRADED:
+                self.health = frontend.HEALTHY
         self._dirty = False
 
     def submit(self, op) -> bool:
@@ -370,7 +394,28 @@ class ShardFrontend(frontend.FrontendBase):
                                        for w in self.dht.writebacks)
             out["pool_bytes"] = sum(w.pool.plane_bytes
                                     for w in self.dht.writebacks)
+            degraded = self.dht.degraded_shards()
+            out["shards_degraded"] = degraded
+            out["health"] = (frontend.DEGRADED if degraded
+                             else frontend.HEALTHY)
+            out["flush_io_errors"] = sum(w.flush_io_errors
+                                         for w in self.dht.writebacks)
+            out["degraded_flushes"] = sum(w.degraded_flushes
+                                          for w in self.dht.writebacks)
         return out
+
+    def try_recover(self) -> bool:
+        """Re-probe degraded shard pools; True when every shard is back
+        HEALTHY. Healthy shards were never interrupted — recovery is
+        strictly per-shard (fault isolation)."""
+        if self.dht.writebacks is None:
+            return True
+        if self.dht.degraded_shards():
+            self.dht.recover_pools()
+        ok = not self.dht.degraded_shards()
+        if ok:
+            self.health = frontend.HEALTHY
+        return ok
 
     def _write_pending(self) -> bool:
         return self._pending is not None or self._split_keys is not None

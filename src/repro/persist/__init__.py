@@ -20,9 +20,20 @@ on first access by the existing lazy path (core/recovery.py). Handing the
 table to ``serving.frontend.DashFrontend`` gives flush-on-publish: every
 acknowledged batch is durable before its ops complete.
 
+Media hardening (PR 6): ``reopen(verify=True)`` additionally checks every
+record row against the pool's per-row checksum region. Rows the redo log
+could not rebuild are quarantined (cleared + scheduled for re-flush) and
+surfaced in ``table.lost_report`` / ``info`` — an explicit lost-keys report
+instead of silently serving bit-rotted bytes. A seeded
+``faults.FaultPlan`` can be attached to any create/open to inject torn
+persists, bit rot, transient EIO, and ENOSPC (tests/test_faults.py,
+benchmarks/chaos.py).
+
 The sharded DHT gets one pool per shard (``create_shard_pools`` /
 ``reopen_shards``), created, flushed, and reopened independently — a shard
-restart never touches its neighbors' pools.
+restart never touches its neighbors' pools, a shard's media fault degrades
+only that shard, and per-shard reopen retries transient faults with
+backoff.
 """
 from __future__ import annotations
 
@@ -37,27 +48,32 @@ from repro.core import recovery
 from repro.core.layout import DashConfig, DashState
 from repro.core.table import DashEH, DashLH, DashTable
 
-from .pool import PmPool, PoolError, Superblock
-from .writeback import SimulatedCrash, WritebackEngine
+from .faults import FaultPlan, TornPersist
+from .pool import FlushError, PmPool, PoolError, Superblock
+from .writeback import (Scrubber, SimulatedCrash, WritebackDegraded,
+                        WritebackEngine)
 
 __all__ = [
-    "PmPool", "PoolError", "Superblock", "WritebackEngine", "SimulatedCrash",
-    "create", "reopen", "durable_open", "shard_pool_paths",
+    "PmPool", "PoolError", "FlushError", "Superblock", "WritebackEngine",
+    "WritebackDegraded", "SimulatedCrash", "Scrubber", "FaultPlan",
+    "TornPersist", "create", "reopen", "durable_open", "shard_pool_paths",
     "create_shard_pools", "open_shard_pools", "flush_shards",
-    "reopen_shards",
+    "recover_shards", "reopen_shards",
 ]
 
 _CLS = {"eh": DashEH, "lh": DashLH}
 
 
-def create(path: str, cfg: DashConfig, mode: str = "eh",
+def create(path: str, cfg: DashConfig, mode: str = "eh", faults=None,
            **table_kw) -> DashTable:
     """Allocate a fresh pool at ``path`` and return a durable table bound to
     it. The table is marked dirty-serving immediately (clean goes durable
     only through ``table.close()``), and the empty state is flushed so a
-    crash before the first ``flush()`` reopens to a valid empty table."""
+    crash before the first ``flush()`` reopens to a valid empty table.
+    A failed allocation (e.g. ENOSPC) raises ``PoolError`` and leaves no
+    partial file behind."""
     import jax.numpy as jnp
-    pool = PmPool.create(path, cfg, mode)
+    pool = PmPool.create(path, cfg, mode, faults=faults)
     table = _CLS[mode](cfg, **table_kw)
     table.state = table.state._replace(clean=jnp.asarray(False))
     table.attach_writeback(WritebackEngine(pool))
@@ -65,29 +81,65 @@ def create(path: str, cfg: DashConfig, mode: str = "eh",
     return table
 
 
-def reopen(path: str, **table_kw) -> Tuple[DashTable, dict]:
+def reopen(path: str, verify: bool = True, faults=None,
+           **table_kw) -> Tuple[DashTable, dict]:
     """Instant restart from a pool file: constant work before the table can
     serve (map + superblock + V bump + a scalars-only flush to mark the new
     serving period dirty). All real recovery is deferred to first access of
     each segment (``DashTable._ensure_recovered``); ``info['seconds']``
     times exactly the blocking part.
 
+    ``verify=True`` (the default) additionally recomputes every record
+    row's checksum against the pool's checksum region — still O(pool
+    size), not O(keys) — and quarantines mismatching rows
+    (``recovery.quarantine_rows``): corrupted buckets are cleared and
+    reported via ``table.lost_report`` (and ``info['quarantined_bt'/'_nb']``,
+    ``info['lost_records']``) rather than served. The quarantined rows'
+    version words are forced off the pool's, so the marker flush below
+    immediately rewrites them (healing the checksums).
+
     Merged-away segment ids (``free_segments``) are not persisted: a
     reopened table re-allocates from the watermark and re-learns free ids
     from future merges — capacity conservatism, never a correctness issue.
     """
     t0 = time.perf_counter()
-    pool = PmPool.open(path)
+    pool = PmPool.open(path, faults=faults)
     if pool.sb.flush_seq == 0:
         raise PoolError(f"pool at {path} was never flushed")
     state = pool.read_state()
     state, work = recovery.instant_restart(state,
                                            clean_override=pool.sb.clean)
+    report = []
+    if verify:
+        bad = pool.verify_checksums()
+        if bad["bt"].size or bad["nb"].size:
+            state, report = recovery.quarantine_rows(
+                pool.cfg, pool.mode, state, pool.disk_plane("version"),
+                bad["bt"], bad["nb"])
+            # persist the loss evidence BEFORE the healing flush below: a
+            # crash after the heal but before the next verify would
+            # otherwise reopen a clean-looking pool and turn this explicit
+            # loss into a silent one
+            pool.record_lost(report)
+    # after quarantine (a torn handle word must never inflate the floor):
+    # published records may reference heap rows above the stale scalar
+    state = recovery.heap_top_floor(pool.cfg, state)
+    work["quarantined_bt"] = sum(1 for r in report if r["plane"] == "bt")
+    work["quarantined_nb"] = sum(1 for r in report if r["plane"] == "nb")
+    work["lost_records"] = sum(r.get("lost_records", 0) for r in report)
+    work["lost_records_total"] = pool.sb.lost_records
+    work["log_lost"] = pool.log_lost
     table = _CLS[pool.mode](pool.cfg, state=state, **table_kw)
+    # merged view: rows quarantined now + evidence persisted by any earlier
+    # (possibly crashed) reopen of this pool
+    table.lost_report = pool.lost_entries()
     table.attach_writeback(WritebackEngine(pool))
+    if report:
+        table.dirty.note_segments([r["seg"] for r in report])
     # commit the dirty-serving marker (and the bumped V) BEFORE serving: a
     # crash from here on must reopen as dirty. The version diff vs the pool
-    # is empty, so this flush writes scalars + commit only.
+    # is empty (clean reopen) or exactly the quarantined rows, so this
+    # flush writes scalars + quarantine repairs + commit only.
     table.flush()
     work["seconds"] = time.perf_counter() - t0
     work["flush_seq"] = pool.sb.flush_seq
@@ -112,35 +164,69 @@ def shard_pool_paths(dirpath: str, n_shards: int) -> List[str]:
             for i in range(n_shards)]
 
 
-def create_shard_pools(dirpath: str, cfg: DashConfig,
-                       n_shards: int) -> List[WritebackEngine]:
-    """One independent pool per shard (all EH — the DHT's shard type)."""
+def create_shard_pools(dirpath: str, cfg: DashConfig, n_shards: int,
+                       faults: Optional[list] = None
+                       ) -> List[WritebackEngine]:
+    """One independent pool per shard (all EH — the DHT's shard type).
+    ``faults`` optionally attaches one FaultPlan per shard."""
     os.makedirs(dirpath, exist_ok=True)
-    return [WritebackEngine(PmPool.create(p, cfg, "eh"))
-            for p in shard_pool_paths(dirpath, n_shards)]
+    paths = shard_pool_paths(dirpath, n_shards)
+    return [WritebackEngine(PmPool.create(p, cfg, "eh",
+                                          faults=faults[i] if faults else None))
+            for i, p in enumerate(paths)]
 
 
-def open_shard_pools(dirpath: str) -> List[WritebackEngine]:
+def open_shard_pools(dirpath: str, faults: Optional[list] = None
+                     ) -> List[WritebackEngine]:
     paths = sorted(glob.glob(os.path.join(dirpath, "shard_*.pool")))
     if not paths:
         raise PoolError(f"no shard pools under {dirpath}")
-    return [WritebackEngine(PmPool.open(p)) for p in paths]
+    return [WritebackEngine(PmPool.open(p,
+                                        faults=faults[i] if faults else None))
+            for i, p in enumerate(paths)]
 
 
 def flush_shards(state: DashState, wbs: List[WritebackEngine]) -> int:
     """Flush a device-sharded state (leading ``(n_shards, ...)`` axes) into
     the per-shard pools — each shard's dirty diff runs against its own pool,
     so an insert burst that only touched two owners flushes two pools'
-    dirty rows and commits the rest with a scalars-only write."""
+    dirty rows and commits the rest with a scalars-only write.
+
+    Per-shard fault isolation: a shard whose pool trips the degraded path
+    is skipped (its engine reports ``degraded``; its pool keeps the last
+    committed image) while every healthy neighbor still flushes — one
+    failing device never blocks the fleet's durability."""
     host = {n: np.asarray(getattr(state, n)) for n in DashState._fields}
     total = 0
     for i, wb in enumerate(wbs):
+        if wb.degraded:
+            wb.degraded_flushes += 1
+            continue
         shard = DashState(**{n: host[n][i] for n in DashState._fields})
-        total += wb.flush(shard)
+        try:
+            total += wb.flush(shard)
+        except WritebackDegraded:
+            continue                   # this shard only; neighbors proceed
     return total
 
 
-def reopen_shards(dirpath: str, eager_recover_dirty: bool = True
+def recover_shards(state: DashState, wbs: List[WritebackEngine]) -> int:
+    """Probe every degraded shard engine (``try_recover``: fence probe +
+    force-full resync flush). Returns how many shards came back healthy."""
+    host = {n: np.asarray(getattr(state, n)) for n in DashState._fields}
+    back = 0
+    for i, wb in enumerate(wbs):
+        if not wb.degraded:
+            continue
+        shard = DashState(**{n: host[n][i] for n in DashState._fields})
+        if wb.try_recover(shard):
+            back += 1
+    return back
+
+
+def reopen_shards(dirpath: str, eager_recover_dirty: bool = True,
+                  verify: bool = True, faults: Optional[list] = None,
+                  retries: int = 2, retry_base_s: float = 0.002
                   ) -> Tuple[DashState, List[WritebackEngine], dict]:
     """Reopen every shard pool independently and stack the shard states
     into one ``(n_shards, ...)`` host pytree (the caller device_puts it with
@@ -150,23 +236,68 @@ def reopen_shards(dirpath: str, eager_recover_dirty: bool = True
     recovered here (``recovery.recover_all``) — the sharded data plane has
     no per-access lazy hook (reads run inside one shard_map dispatch), so
     the work lands at reopen, shard-local and independent. Clean shards pay
-    nothing."""
+    nothing.
+
+    Fault isolation (PR 6): each shard's reopen is retried ``retries``
+    times with exponential backoff on transient flush errors; a shard that
+    still cannot commit its dirty-serving marker is left attached but
+    DEGRADED (volatile until ``recover_shards``) instead of failing the
+    whole fleet. ``verify`` runs the per-shard checksum scan; quarantined
+    rows are reported per shard in ``info['lost_reports']``."""
     import jax.numpy as jnp
-    wbs = open_shard_pools(dirpath)
-    shards, dirty = [], 0
-    for wb in wbs:
-        pool = wb.pool
-        if pool.sb.flush_seq == 0:
-            raise PoolError(f"shard pool {pool.path} was never flushed")
-        st = pool.read_state()
-        st, work = recovery.instant_restart(st, clean_override=pool.sb.clean)
-        if not work["clean"]:
-            dirty += 1
-            if eager_recover_dirty:
-                st = recovery.recover_all(pool.cfg, "eh", st)
+    paths = sorted(glob.glob(os.path.join(dirpath, "shard_*.pool")))
+    if not paths:
+        raise PoolError(f"no shard pools under {dirpath}")
+    wbs, shards = [], []
+    dirty = degraded = 0
+    lost_reports = {}
+    for i, p in enumerate(paths):
+        plan = faults[i] if faults else None
+        wb = st = None
+        delay = retry_base_s
+        for attempt in range(retries + 1):
+            try:
+                wb = WritebackEngine(PmPool.open(p, faults=plan))
+                pool = wb.pool
+                if pool.sb.flush_seq == 0:
+                    raise PoolError(f"shard pool {p} was never flushed")
+                st = pool.read_state()
+                st, work = recovery.instant_restart(
+                    st, clean_override=pool.sb.clean)
+                if verify:
+                    bad = pool.verify_checksums()
+                    if bad["bt"].size or bad["nb"].size:
+                        st, rep = recovery.quarantine_rows(
+                            pool.cfg, "eh", st,
+                            pool.disk_plane("version"),
+                            bad["bt"], bad["nb"])
+                        pool.record_lost(rep)    # durable before healing
+                    persisted = pool.lost_entries()
+                    if persisted:
+                        lost_reports[i] = persisted
+                st = recovery.heap_top_floor(pool.cfg, st)
+                if not work["clean"]:
+                    dirty += 1
+                    if eager_recover_dirty:
+                        st = recovery.recover_all(pool.cfg, "eh", st)
+                wb.flush(st)           # dirty-serving marker, per shard
+                break
+            except (FlushError, WritebackDegraded):
+                if attempt >= retries:
+                    # keep the shard attached but degraded: it serves the
+                    # reopened state volatile; neighbors are unaffected
+                    if wb is not None and st is not None:
+                        wb.degraded = True
+                        degraded += 1
+                        break
+                    raise
+                time.sleep(delay)
+                delay *= 2
         shards.append(st)
-        wb.flush(st)                 # dirty-serving marker, per shard
+        wbs.append(wb)
     stacked = DashState(*[jnp.stack([getattr(s, n) for s in shards])
                           for n in DashState._fields])
     return stacked, wbs, {"n_shards": len(wbs), "dirty_shards": dirty,
+                          "degraded_shards": degraded,
+                          "lost_reports": lost_reports,
                           "cfg": wbs[0].pool.cfg}

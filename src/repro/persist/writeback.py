@@ -7,7 +7,10 @@ every plane mutation bumps its bucket's version word (core/bucket.py), so the
 diff of the live version plane against the POOL's version plane is a complete
 change record; the host ``DirtyTracker`` hint is audited against it
 (``flush_hint_misses``) and carries the force-full escape for paths outside
-the version discipline (crash simulation, pointer mode).
+the version discipline (crash simulation, degraded-mode resync). The
+pointer-mode key heap carries no version words but is append-only, so its
+tail above the pool's durable ``heap_top`` is the exact dirty set —
+pointer-mode flushes are O(dirty rows + heap tail), not O(pool).
 
 **Crash consistency.** Every dirty bucket row is classified against the
 pool's current contents:
@@ -45,13 +48,20 @@ of a torn flush may land partially, exactly like in-flight stores on PM):
   4. clear rows: meta/ometa/version. Only now can a record leave a row —
      its displacement copy (if any) was published in phase 2. Acked deletes
      of previous flushes stay deleted; this flush's deletes are unacked
-     until commit either way.
-  5. redo log: rebuilt rows (+ routing planes when any), one staged write.
+     until commit either way. In place ONLY when no rebuilt rows exist this
+     flush: a moved record's destination may be a rebuilt row that lives
+     solely in the (uncommitted) redo log, so with a log the clears join
+     the logged set and land atomically with the commit instead.
+  5. redo log: rebuilt + clear rows (+ routing planes when any), one
+     staged write.
   6. commit — the superblock slot (flush_seq, clean marker, V, log
      descriptor + CRC), fenced: the acknowledgment point.
   7. apply the log to the home rows, fence. A crash inside the apply is
      repaired at the next open: a committed log is re-applied idempotently
      (absolute row contents).
+  8. commit again with the log descriptor cleared (PR 6): the applied log
+     is retired, so a descriptor seen at open always refers to live log
+     bytes — a CRC mismatch there is media loss, never staleness.
 
 The emulated store granularity is one plane scatter between fences (a clwb
 train); ``inject_crash(after_ops)`` kills the engine after that many stores,
@@ -76,7 +86,7 @@ from repro.core import layout
 from repro.core.epoch import DirtyHint
 from repro.core.layout import DashState
 
-from .pool import PmPool
+from .pool import FlushError, PmPool
 
 #: phase-1 record planes, in flush order (keys/values before anything that
 #: could publish them)
@@ -89,6 +99,14 @@ PUBLISH_BT = ("meta", "version")
 class SimulatedCrash(RuntimeError):
     """Raised when an injected crash point is reached mid-flush; the engine
     is dead afterwards (the process 'died' — reopen the pool to continue)."""
+
+
+class WritebackDegraded(RuntimeError):
+    """A flush fence kept failing past the bounded retry budget: the engine
+    is DEGRADED. The pool's durable image is the last committed flush
+    (phases land between fences, so nothing half-acknowledged exists);
+    serving must continue volatile. ``try_recover`` probes the device and,
+    on success, resynchronizes with one force-full flush."""
 
 
 def _slot_bits(meta_rows: np.ndarray, num_slots: int) -> np.ndarray:
@@ -108,19 +126,28 @@ class WritebackEngine:
     pool's ``fences``.
     """
 
-    def __init__(self, pool: PmPool):
+    def __init__(self, pool: PmPool, retry_limit: int = 4,
+                 retry_base_s: float = 0.002):
         self.pool = pool
         self.cfg = pool.cfg
         self.mode = pool.mode
+        self.retry_limit = retry_limit      # fence retries before DEGRADED
+        self.retry_base_s = retry_base_s    # backoff base (doubles per retry)
         self.flushes = 0
         self.flushed_bytes = 0
         self.last_flush_bytes = 0
         self.last_flush_rows = 0      # per-plane row writes of the last flush
         self.last_dirty_rows = 0      # distinct dirty bucket rows last flush
+        self.last_heap_tail_rows = 0  # pointer-mode heap rows of last flush
         self.flushed_rows = 0
         self.logged_rows = 0
         self.flush_seconds = 0.0
         self.flush_hint_misses = 0
+        self.flush_io_errors = 0      # fence attempts that raised FlushError
+        self.flush_retries = 0        # fences retried after a transient error
+        self.degraded_flushes = 0     # flush calls refused while degraded
+        self.recoveries = 0           # successful DEGRADED -> healthy returns
+        self.degraded = False
         self._ops_budget: Optional[int] = None
         self.dead = False
 
@@ -156,6 +183,62 @@ class WritebackEngine:
         self._store()
         self._account(self.pool.write_plane(name, live))
 
+    # -- fence with bounded retry / graceful degradation -------------------
+
+    def _fence(self):
+        """Fence with bounded retry + exponential backoff on transient
+        flush errors (EIO and friends). The mapping still holds every
+        store, so a retried msync re-persists them — retrying the fence IS
+        retrying the writes. Past the budget the engine goes DEGRADED and
+        raises ``WritebackDegraded``; the pool keeps its last committed
+        image and serving continues volatile."""
+        delay = self.retry_base_s
+        attempt = 0
+        while True:
+            try:
+                self.pool.fence()
+                return
+            except SimulatedCrash:
+                self.dead = True
+                raise
+            except FlushError as e:
+                self.flush_io_errors += 1
+                if attempt >= self.retry_limit:
+                    self.degraded = True
+                    raise WritebackDegraded(
+                        f"fence on {self.pool.path} failed "
+                        f"{attempt + 1}x (last: {e}); engine degraded"
+                    ) from e
+                attempt += 1
+                self.flush_retries += 1
+                time.sleep(delay)
+                delay *= 2
+
+    def try_recover(self, state: DashState) -> bool:
+        """Attempt DEGRADED -> healthy: probe the fence once and, if the
+        device answers, resynchronize the pool with one force-full flush
+        (the degraded window may have left partial uncommitted phases in
+        the mapping; a full rewrite + commit supersedes them). Returns
+        True when the engine is healthy afterwards."""
+        if self.dead:
+            return False
+        if not self.degraded:
+            return True
+        try:
+            self.pool.fence()
+        except SimulatedCrash:
+            self.dead = True
+            raise
+        except FlushError:
+            return False
+        self.degraded = False
+        try:
+            self.flush(state, DirtyHint(segments=set(), dir=False, full=True))
+        except WritebackDegraded:
+            return False
+        self.recoveries += 1
+        return True
+
     # -- the flush ---------------------------------------------------------
 
     def flush(self, state: DashState, hint: Optional[DirtyHint] = None) -> int:
@@ -165,14 +248,19 @@ class WritebackEngine:
         for directory/segment metadata, always-copy for scalars."""
         if self.dead:
             raise SimulatedCrash("writeback engine died in a previous flush")
+        if self.degraded:
+            self.degraded_flushes += 1
+            raise WritebackDegraded(
+                f"pool {self.pool.path} is degraded; call try_recover first")
         t0 = time.perf_counter()
         self.last_flush_bytes = 0
         self.last_flush_rows = 0
+        self.last_heap_tail_rows = 0
         cfg = self.cfg
         NB, BT, SL = cfg.num_buckets, cfg.buckets_total, cfg.num_slots
 
         live = {n: np.asarray(getattr(state, n)) for n in DashState._fields}
-        full = (self.pool.sb.flush_seq == 0 or cfg.pointer_mode
+        full = (self.pool.sb.flush_seq == 0
                 or (hint is not None and hint.full))
 
         # dirty rows = version-plane diff against the pool (the durable
@@ -230,13 +318,28 @@ class WritebackEngine:
         for n in DATA_BT:
             self._write_rows(n, ip_bt, rowview[n])
         self._write_rows("ofp", ip_nb, rowview["ofp"])
-        self.pool.fence()
+        # pointer mode: the key heap is append-only (handles are bump-
+        # allocated), so only the tail above the pool's durable high water
+        # needs writing — O(heap-tail) instead of O(heap), and it lands in
+        # phase 1 so any handle a later phase publishes already has its
+        # heap row durable
+        if cfg.pointer_mode and cfg.key_heap_size > 0:
+            disk_top = int(self.pool.plane("heap_top")[()])
+            live_top = int(live["heap_top"])
+            lo = 0 if full else max(0, min(disk_top, live_top))
+            hi = int(live["key_heap"].shape[0]) if full else live_top
+            if hi > lo:
+                self._store()
+                self._account(self.pool.write_span("key_heap", lo, hi,
+                                                   live["key_heap"]))
+                self.last_heap_tail_rows = hi - lo
+        self._fence()
 
         # phase 2: publish the append rows
         self._write_rows("meta", a_bt, rowview["meta"])
         self._write_rows("ometa", a_nb, rowview["ometa"])
         self._write_rows("version", a_bt, rowview["version"])
-        self.pool.fence()
+        self._fence()
 
         # phase 3: routing + per-segment metadata + scalars, in place only
         # when no rebuilt rows ride this flush (else they go via the log)
@@ -246,40 +349,60 @@ class WritebackEngine:
                     if full or not np.array_equal(self.pool.plane(n), live[n]):
                         self._write_plane(n, live[n])
             for n in layout.SCALAR_PLANES:
+                if n == "key_heap" and cfg.pointer_mode:
+                    continue           # tail already written in phase 1
                 self._write_plane(n, live[n])
-            self.pool.fence()
+            self._fence()
 
         # phase 4: clear rows — records may leave, their displacement copies
-        # (if any) are already published
-        self._write_rows("meta", c_bt, rowview["meta"])
-        self._write_rows("ometa", c_nb, rowview["ometa"])
-        self._write_rows("version", c_bt, rowview["version"])
-        self.pool.fence()
+        # (if any) are already published. In place ONLY when no log rides
+        # this flush: with rebuilt rows, a moved record's destination may
+        # exist solely in the not-yet-committed log, so a durable clear
+        # before the commit fence can orphan an acked record (the chaos
+        # matrix found exactly this: torn fence between the clears and the
+        # commit). With a log, the clears join the logged set instead and
+        # land atomically with the commit at apply time.
+        if not log_routing:
+            self._write_rows("meta", c_bt, rowview["meta"])
+            self._write_rows("ometa", c_nb, rowview["ometa"])
+            self._write_rows("version", c_bt, rowview["version"])
+            self._fence()
 
-        # phase 5: stage rebuilt rows (+ routing) in the redo log
+        # phase 5: stage rebuilt (+ clear) rows (+ routing) in the redo log
         log_bt = log_nb = 0
         log_crc = 0
         if log_routing:
+            l_bt = np.concatenate([r_bt, c_bt])
+            l_nb = np.concatenate([r_nb, c_nb])
             self._store()
-            nbytes, log_crc = self.pool.write_log(r_bt, r_nb, True, live)
-            self._account(nbytes, r_bt.size)
-            self.logged_rows += int(r_bt.size)
-            log_bt, log_nb = int(r_bt.size), int(r_nb.size)
-            self.pool.fence()
+            nbytes, log_crc = self.pool.write_log(l_bt, l_nb, True, live)
+            self._account(nbytes, l_bt.size)
+            self.logged_rows += int(l_bt.size)
+            log_bt, log_nb = int(l_bt.size), int(l_nb.size)
+            self._fence()
 
         # phase 6: commit record (acknowledgment point)
         self._store()
         self.pool.commit(gver=int(live["gver"]), clean=bool(live["clean"]),
                          log_bt=log_bt, log_nb=log_nb,
                          log_routing=log_routing, log_crc=log_crc)
-        self.pool.fence()
+        self._fence()
 
         # phase 7: apply the committed log to the home rows (idempotent —
         # a crash inside the apply is redone at the next open)
+        # phase 8: clear the log descriptor with a second commit. After
+        # this, a later flush's staging (phase 5) can never be confused
+        # with a committed-but-unapplied log — so a descriptor whose CRC
+        # fails at open is REAL log-region media loss, not staleness
+        # (pool.apply_log sets ``log_lost`` on exactly that signal).
         if log_routing:
             self._store()
             self._account(self.pool.apply_log())
-            self.pool.fence()
+            self._fence()
+            self._store()
+            self.pool.commit(gver=int(live["gver"]),
+                             clean=bool(live["clean"]))
+            self._fence()
 
         self.flushes += 1
         self.flush_seconds += time.perf_counter() - t0
@@ -292,10 +415,96 @@ class WritebackEngine:
             "last_flush_bytes": self.last_flush_bytes,
             "flushed_rows": self.flushed_rows,
             "last_dirty_rows": self.last_dirty_rows,
+            "last_heap_tail_rows": self.last_heap_tail_rows,
             "logged_rows": self.logged_rows,
             "flush_seconds": self.flush_seconds,
             "flush_hint_misses": self.flush_hint_misses,
+            "flush_io_errors": self.flush_io_errors,
+            "flush_retries": self.flush_retries,
+            "degraded": self.degraded,
+            "degraded_flushes": self.degraded_flushes,
+            "recoveries": self.recoveries,
             "fences": self.pool.fences,
             "pool_bytes": self.pool.plane_bytes,
             "flush_seq": self.pool.sb.flush_seq,
         }
+
+
+class Scrubber:
+    """Incremental background media scrub over the pool's checksummed
+    planes. Each ``tick`` verifies a window of bucket rows (every record
+    plane at those rows) against the stored per-row checksums; a mismatch
+    is media rot that crept in SINCE the row was written (data + checksum
+    travel in one store op, so they never disagree at a store boundary).
+
+    While the table is live the serving state is authoritative, so a bad
+    row is repaired in place from ``state`` — detection latency is then
+    bounded by one full pass (``rows_total / rows_per_tick`` ticks), which
+    is what benchmarks/chaos.py measures. Repairs are fenced immediately.
+    """
+
+    def __init__(self, wb: WritebackEngine, rows_per_tick: int = 512):
+        self.wb = wb
+        self.rows_per_tick = int(rows_per_tick)
+        self.bt_rows = wb.pool.csum.rows_of("version")
+        self.nb_rows = wb.pool.csum.rows_of("ometa")
+        self.rows_total = self.bt_rows + self.nb_rows
+        self.pos = 0                  # scan cursor in [0, rows_total)
+        self.cycles = 0               # completed full passes
+        self.scanned_rows = 0
+        self.mismatched_rows = 0
+        self.repaired_rows = 0
+
+    def _scrub_group(self, names, lo, hi, live) -> int:
+        pool = self.wb.pool
+        ids = np.arange(lo, hi, dtype=np.int64)
+        repaired = 0
+        for n in names:
+            have = layout.np_row_checksum(pool.rows(n)[ids])
+            bad = ids[have != pool.csum_rows(n)[ids]]
+            if bad.size:
+                self.mismatched_rows += int(bad.size)
+                rows = live[n].reshape(pool.spec(n).rows, -1)
+                pool.write_rows(n, bad, rows)
+                repaired += int(bad.size)
+        return repaired
+
+    def tick(self, state: DashState) -> dict:
+        """Scrub the next window; returns the per-tick report. Safe to call
+        while the engine is degraded — repairs are volatile stores either
+        way until a fence succeeds, and the fence failure is swallowed
+        (the rows stay dirty-diffable; recovery's force-full rewrites
+        them)."""
+        if self.wb.dead or self.rows_total == 0:
+            return {"scanned": 0, "repaired": 0}
+        lo = self.pos
+        hi = min(lo + self.rows_per_tick, self.rows_total)
+        live = {n: np.asarray(getattr(state, n)) for n in layout.CSUM_PLANES}
+        repaired = 0
+        if lo < self.bt_rows:
+            repaired += self._scrub_group(
+                layout.BT_PLANES, lo, min(hi, self.bt_rows), live)
+        if hi > self.bt_rows:
+            repaired += self._scrub_group(
+                layout.NB_PLANES, max(lo - self.bt_rows, 0),
+                hi - self.bt_rows, live)
+        self.scanned_rows += hi - lo
+        self.repaired_rows += repaired
+        self.pos = hi % self.rows_total
+        if self.pos == 0:
+            self.cycles += 1
+        if repaired:
+            try:
+                self.wb.pool.fence()
+            except SimulatedCrash:
+                self.wb.dead = True
+                raise
+            except FlushError:
+                pass                  # degraded device; repair stays volatile
+        return {"scanned": hi - lo, "repaired": repaired}
+
+    def stats(self) -> dict:
+        return {"scrub_cycles": self.cycles,
+                "scrub_scanned_rows": self.scanned_rows,
+                "scrub_mismatched_rows": self.mismatched_rows,
+                "scrub_repaired_rows": self.repaired_rows}

@@ -69,12 +69,26 @@ import numpy as np
 from repro.core import engine as dash_engine
 from repro.core import hashing
 from repro.core.epoch import SnapshotRegistry
-from repro.core.layout import INSERTED, NOT_FOUND
+from repro.core.layout import DROPPED, INSERTED, NOT_FOUND
 from repro.core.table import DashTable, TableFullError
 
 from .engine import buckets_changed
 
 READ, INSERT, UPDATE, DELETE, RMW = "read", "insert", "update", "delete", "rmw"
+
+#: frontend health states (PR 6). Guarantees:
+#:   HEALTHY  — every acknowledged write is durable (flush-on-publish ran
+#:              through its commit fence) and reads serve verified state.
+#:   DEGRADED — the durable device stopped accepting flushes past the retry
+#:              budget: serving CONTINUES (reads + writes, full speed) but
+#:              acknowledgments are volatile until ``try_recover`` brings
+#:              the pool back (then one force-full flush resynchronizes).
+#:              The pool's on-media image stays the last committed flush.
+#:   READONLY — capacity exhaustion (segment pool / retry budget) with
+#:              ``readonly_on_full``: writes are rejected at admission and
+#:              in-flight writes fail explicitly (DROPPED); reads keep
+#:              serving. Terminal until operator action (resize/restart).
+HEALTHY, DEGRADED, READONLY = "healthy", "degraded", "readonly"
 
 
 @dataclasses.dataclass
@@ -167,12 +181,18 @@ class FrontendBase:
         self.writes = AdmissionQueue(queue_depth)
         self.former = BatchFormer(max_batch)
         self.registry = SnapshotRegistry()
+        self.health = HEALTHY
+        self.degraded_events = 0     # HEALTHY -> DEGRADED transitions
+        self.unflushed_publishes = 0  # publishes acked volatile while degraded
         self.snapshot_reads = 0      # queries answered from the snapshot
         self.retried_reads = 0       # queries re-run on the live version
         self.read_latencies: List[float] = []
         self.write_latencies: List[float] = []
 
     def submit(self, op: Op) -> bool:
+        if self.health == READONLY and op.kind != READ:
+            self.writes.rejected += 1
+            return False
         lane = self.reads if op.kind == READ else self.writes
         return lane.offer(op)
 
@@ -192,9 +212,26 @@ class FrontendBase:
         out = self.registry.stats()
         out["snapshot_reads"] = self.snapshot_reads
         out["retried_reads"] = self.retried_reads
-        wb = getattr(getattr(self, "table", None), "writeback", None)
+        out["health"] = self.health
+        out["degraded_events"] = self.degraded_events
+        out["unflushed_publishes"] = self.unflushed_publishes
+        table = getattr(self, "table", None)
+        if table is not None:
+            report = getattr(table, "lost_report", [])
+            out["lost_rows"] = sum(1 for r in report
+                                   if r.get("plane") == "bt")
+            out["lost_records"] = sum(r.get("lost_records", 0)
+                                      for r in report)
+        wb = getattr(table, "writeback", None)
         if wb is not None:
+            # superblock count is the durable cumulative truth (survives
+            # the healing flush and later restarts); prefer it when present
+            out["lost_records"] = max(out.get("lost_records", 0),
+                                      wb.pool.sb.lost_records)
             out.update(wb.stats())
+        scrubber = getattr(self, "scrubber", None)
+        if scrubber is not None:
+            out.update(scrubber.stats())
         return out
 
     def _finish_reads(self, ops: List[Op], found, vals, n_changed: int):
@@ -254,11 +291,24 @@ class DashFrontend(FrontendBase):
     """
 
     def __init__(self, table: DashTable, *, max_batch: int = 256,
-                 queue_depth: int = 4096):
+                 queue_depth: int = 4096, readonly_on_full: bool = False,
+                 scrub_interval: int = 0, scrub_rows: int = 512):
         super().__init__(max_batch=max_batch, queue_depth=queue_depth)
         self.table = table
         self.cfg = table.cfg
         self.mode = table.mode
+        # capacity exhaustion policy: False preserves the raise-through
+        # behavior; True turns it into the READONLY health state (reads
+        # keep serving, writes fail explicitly)
+        self.readonly_on_full = readonly_on_full
+        # background media scrub: every `scrub_interval` ticks verify+repair
+        # one `scrub_rows` window of the attached pool (0 disables)
+        self.scrub_interval = scrub_interval
+        self._scrub_countdown = scrub_interval
+        self.scrubber = None
+        if scrub_interval > 0 and table.writeback is not None:
+            from repro.persist.writeback import Scrubber
+            self.scrubber = Scrubber(table.writeback, rows_per_tick=scrub_rows)
         self._dirty = True            # live state diverged from the snapshot
         self._publish()
         # in-flight write machinery (at most one of each at a time)
@@ -286,13 +336,47 @@ class DashFrontend(FrontendBase):
         Flush-on-publish: with a durable pool attached (persist/), the same
         dirty hint drives the pool writeback right after the publish — an
         op acknowledged by this frontend is durable, and the flush volume
-        tracks the publish volume (both are O(dirty bucket rows))."""
+        tracks the publish volume (both are O(dirty bucket rows)).
+
+        Graceful degradation (PR 6): a flush that exhausts its transient-
+        error retry budget marks the frontend DEGRADED instead of failing
+        the publish — serving continues volatile (the pool keeps its last
+        committed image; acknowledgments stop implying durability until
+        ``try_recover`` succeeds). The hint loss is harmless: recovery
+        resynchronizes with a force-full flush."""
         hint = self.table.dirty.drain()
         self.registry.publish_cow(self.cfg, self.table.state,
                                   dirty_hint=hint)
-        if self.table.writeback is not None:
-            self.table.writeback.flush(self.table.state, hint)
+        wb = self.table.writeback
+        if wb is not None:
+            if wb.degraded:
+                self.unflushed_publishes += 1
+            else:
+                from repro.persist.writeback import WritebackDegraded
+                try:
+                    wb.flush(self.table.state, hint)
+                except WritebackDegraded:
+                    if self.health == HEALTHY:
+                        self.health = DEGRADED
+                        self.degraded_events += 1
+                    self.unflushed_publishes += 1
         self._dirty = False
+
+    def try_recover(self) -> bool:
+        """Attempt DEGRADED -> HEALTHY: probe the pool's fence and, on
+        success, resynchronize it with one force-full flush
+        (``WritebackEngine.try_recover``). READONLY is terminal — capacity,
+        not media. Returns True when the frontend is healthy afterwards."""
+        if self.health == READONLY:
+            return False
+        wb = self.table.writeback
+        if wb is None or not wb.degraded:
+            self.health = HEALTHY
+            return True
+        if wb.try_recover(self.table.state):
+            self.health = HEALTHY
+            return True
+        return False
 
     # -- read lane ---------------------------------------------------------
 
@@ -337,7 +421,32 @@ class DashFrontend(FrontendBase):
     # -- write lane --------------------------------------------------------
 
     def _pump_write(self) -> bool:
-        """Advance the write side by one unit. Returns True if work ran."""
+        """Advance the write side by one unit. Returns True if work ran.
+        With ``readonly_on_full``, capacity exhaustion (segment pool /
+        insert retry budget) transitions to READONLY instead of raising:
+        in-flight write ops fail explicitly (DROPPED — never silently),
+        queued writes are rejected, reads keep serving."""
+        try:
+            return self._pump_write_inner()
+        except TableFullError:
+            if not self.readonly_on_full:
+                raise
+            self.health = READONLY
+            if self._insert_ops:
+                self._finish_writes(self._insert_ops,
+                                    [DROPPED] * len(self._insert_ops))
+            self._insert_job, self._insert_ops = None, []
+            self._smo_task = None
+            while len(self.writes):
+                op = self.writes.pop()
+                op.status = DROPPED
+                op.done_t = time.perf_counter()
+                self.writes.rejected += 1
+            self._dirty = True       # surgery may have run mid-SMO
+            self._publish()
+            return True
+
+    def _pump_write_inner(self) -> bool:
         if self._smo_task is not None:
             self.table.state, done = self._smo_task.pump(self.table.state)
             self.smo_stages += 1
@@ -408,6 +517,15 @@ class DashFrontend(FrontendBase):
         self._finish_writes(ops, np.asarray(statuses))
         self._publish()
         return True
+
+    def step(self) -> bool:
+        did = super().step()
+        if self.scrubber is not None:
+            self._scrub_countdown -= 1
+            if self._scrub_countdown <= 0:
+                self._scrub_countdown = self.scrub_interval
+                self.scrubber.tick(self.table.state)
+        return did
 
     def shutdown(self):
         self.drain()

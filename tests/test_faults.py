@@ -1,0 +1,345 @@
+"""Media-failure hardening (ISSUE 6): deterministic fault injection,
+checksummed planes, quarantine, scrubbing, degraded-mode serving, and the
+chaos matrix safety property — every acked key served correctly or
+explicitly reported lost, never a silent wrong read."""
+import os
+
+import numpy as np
+import pytest
+
+from repro import persist
+from repro.core import DashConfig, recovery
+from repro.core.table import DashEH
+from repro.persist import (FaultPlan, FlushError, PoolError, Scrubber,
+                           SimulatedCrash, TornPersist, WritebackDegraded)
+from repro.persist.chaos import CHAOS_CFG, run_many, run_schedule
+from repro.serving import frontend as fe
+from repro.serving.frontend import INSERT, READ, DashFrontend, Op
+from tests.conftest import unique_keys
+
+SMALL = CHAOS_CFG
+
+
+def _vals(n, base=1):
+    return (np.arange(n) % 2**31).astype(np.uint32) + base
+
+
+def _fill(path, n=400, faults=None, seed=0):
+    t = persist.create(path, SMALL, faults=faults)
+    keys = unique_keys(np.random.default_rng(seed), n)
+    t.insert(keys, _vals(n))
+    t.flush()
+    return t, keys
+
+
+# -- fault primitives ---------------------------------------------------------
+
+def test_enospc_create_fails_clean(tmp_path):
+    p = str(tmp_path / "t.pool")
+    plan = FaultPlan(seed=1, enospc_creates=1)
+    with pytest.raises(PoolError, match="[Nn]o space"):
+        persist.create(p, SMALL, faults=plan)
+    assert not os.path.exists(p)          # no partial file left behind
+    assert plan.enospc_raised == 1
+    t = persist.create(p, SMALL, faults=plan)   # same path, budget drained
+    t.insert(unique_keys(np.random.default_rng(0), 50), _vals(50))
+    t.flush()
+    t.close()
+
+
+def test_transient_eio_burst_absorbed(tmp_path):
+    """A burst within the retry budget is invisible to the caller."""
+    p = str(tmp_path / "t.pool")
+    plan = FaultPlan(seed=2)
+    t, keys = _fill(p, faults=plan)
+    plan.eio_fences[plan.fence_calls] = 2
+    t.insert(unique_keys(np.random.default_rng(7), 60, lo=2**62), _vals(60))
+    t.flush()                             # retries eat the burst silently
+    wb = t.writeback
+    assert plan.eio_raised == 2 and wb.flush_retries >= 2
+    assert not wb.degraded and wb.flush_io_errors == 2
+    t.close()
+
+
+def test_eio_burst_past_budget_degrades_then_recovers(tmp_path):
+    p = str(tmp_path / "t.pool")
+    plan = FaultPlan(seed=3)
+    t, keys = _fill(p, faults=plan)
+    plan.eio_fences[plan.fence_calls] = 9     # > retry budget
+    t.insert(unique_keys(np.random.default_rng(8), 60, lo=2**62), _vals(60))
+    with pytest.raises(WritebackDegraded):
+        t.flush()
+    wb = t.writeback
+    assert wb.degraded
+    with pytest.raises(WritebackDegraded):    # degraded engine refuses work
+        t.flush()
+    f, _ = t.search(keys)
+    assert f.all()                            # serving continues volatile
+    for _ in range(10):                       # probe until the burst drains
+        if wb.try_recover(t.state):
+            break
+    assert not wb.degraded and wb.recoveries == 1
+    t.close()
+    t2, info = persist.reopen(p)              # recovery resynced the pool
+    f, _ = t2.search(keys)
+    assert f.all()
+
+
+def test_torn_persist_quarantines_and_reports(tmp_path):
+    """A torn msync reverts seeded cachelines mid-flush: reopen must
+    quarantine every row whose checksum disagrees, serve all acked keys
+    correctly or list them in the lost report, and heal the checksums."""
+    p = str(tmp_path / "t.pool")
+    plan = FaultPlan(seed=11, torn_line_frac=0.5)
+    t, keys = _fill(p, faults=plan)
+    plan.torn_fences = frozenset([plan.fence_calls + 1])
+    t.insert(unique_keys(np.random.default_rng(9), 300, lo=2**62),
+             _vals(300, base=5000))
+    with pytest.raises(TornPersist):
+        t.flush()
+    assert plan.tears == 1 and plan.torn_bytes > 0
+    t2, info = persist.reopen(p, faults=plan)
+    f, v = t2.search(keys)
+    wrong = int((f & (v != _vals(keys.size))).sum())
+    assert wrong == 0                         # NEVER a silent wrong read
+    for i in np.flatnonzero(~f):              # every miss explicitly lost
+        assert _lost_covers(t2, int(keys[i])), \
+            f"acked key {keys[i]} silently lost"
+    bad = t2.writeback.pool.verify_checksums()
+    assert bad["bt"].size == 0 and bad["nb"].size == 0   # healed
+
+
+def _lost_covers(table, key) -> bool:
+    from repro.persist.chaos import _reported_lost
+    return _reported_lost(table.cfg, table.state, table.lost_report, key)
+
+
+def test_bit_rot_quarantined_at_reopen(tmp_path):
+    p = str(tmp_path / "t.pool")
+    t, keys = _fill(p)
+    t.close()
+    plan = FaultPlan(seed=5, flip_csum_frac=0.3)
+    pool = persist.PmPool.open(p, faults=plan)
+    plan.flip_bits(pool, n=6)
+    pool.close()
+    t2, info = persist.reopen(p)
+    assert info["quarantined_bt"] + info["quarantined_nb"] > 0
+    assert len(t2.lost_report) > 0
+    f, v = t2.search(keys)
+    assert int((f & (v != _vals(keys.size))).sum()) == 0
+    for i in np.flatnonzero(~f):
+        assert _lost_covers(t2, int(keys[i]))
+    # quarantined-row healing is durable: a second reopen verifies clean
+    t2.close()
+    t3, info3 = persist.reopen(p)
+    assert info3["quarantined_bt"] == info3["quarantined_nb"] == 0
+
+
+def test_scrubber_repairs_live_media_rot(tmp_path):
+    p = str(tmp_path / "t.pool")
+    plan = FaultPlan(seed=6)
+    t, keys = _fill(p, faults=plan)
+    scrub = Scrubber(t.writeback, rows_per_tick=512)
+    plan.flip_bits(t.writeback.pool, n=4)
+    pool = t.writeback.pool
+    bad0 = sum(v.size for k, v in pool.verify_checksums().items()
+               if k != "planes")
+    assert bad0 > 0
+    while scrub.cycles == 0:
+        scrub.tick(t.state)
+    assert scrub.repaired_rows == scrub.mismatched_rows >= 1
+    bad1 = sum(v.size for k, v in pool.verify_checksums().items()
+               if k != "planes")
+    assert bad1 == 0                          # live state healed the media
+    st = scrub.stats()
+    assert st["scrub_scanned_rows"] >= bad0
+    t.close()
+    t2, info = persist.reopen(p)              # nothing left to quarantine
+    assert info["quarantined_bt"] == 0 and len(t2.lost_report) == 0
+    f, v = t2.search(keys)
+    assert f.all() and (v == _vals(keys.size)).all()
+
+
+# -- frontend health states ---------------------------------------------------
+
+def test_frontend_degrades_and_recovers(tmp_path):
+    p = str(tmp_path / "t.pool")
+    plan = FaultPlan(seed=7)
+    t = persist.create(p, SMALL, faults=plan)
+    f = DashFrontend(t)
+    keys = unique_keys(np.random.default_rng(1), 200)
+    for k in keys[:120]:
+        f.submit(Op(INSERT, int(k), int(k & 0x7FFFFFFF)))
+    f.drain()
+    assert f.health == fe.HEALTHY
+    plan.eio_fences[plan.fence_calls] = 9
+    for k in keys[120:]:
+        f.submit(Op(INSERT, int(k), int(k & 0x7FFFFFFF)))
+    f.drain()
+    assert f.health == fe.DEGRADED and f.degraded_events == 1
+    assert f.stats()["health"] == fe.DEGRADED
+    assert f.unflushed_publishes >= 1
+    r = Op(READ, int(keys[0]))
+    f.submit(r)
+    f.drain()
+    assert r.found                            # reads keep serving
+    for _ in range(10):
+        if f.try_recover():
+            break
+    assert f.health == fe.HEALTHY and t.writeback.recoveries == 1
+    f.shutdown()
+    t.close()
+    t2, _ = persist.reopen(p)                 # degraded-window keys resynced
+    fo, _ = t2.search(keys)
+    assert fo.all()
+
+
+def test_frontend_readonly_on_capacity(tmp_path):
+    cfg = DashConfig(max_segments=2, dir_depth_max=1, num_buckets=4,
+                     num_slots=4, num_stash=1)
+    f = DashFrontend(DashEH(cfg), readonly_on_full=True)
+    acked = []
+    for k in unique_keys(np.random.default_rng(3), 600):
+        op = Op(INSERT, int(k), int(k & 0x7FFFFFFF))
+        if f.submit(op):
+            acked.append(op)
+        f.step()
+    f.drain()
+    assert f.health == fe.READONLY
+    ok = [op for op in acked if op.status == 0]
+    # every admitted op resolved explicitly: OK or DROPPED, never stranded
+    assert all(op.status >= 0 for op in acked)
+    assert any(op.status != 0 for op in acked)
+    r = Op(READ, ok[0].key)
+    assert f.submit(r)                        # reads still admitted
+    f.drain()
+    assert r.found and r.result == ok[0].value
+    assert not f.submit(Op(INSERT, 123, 1))   # writes rejected at admission
+    assert not f.try_recover()                # READONLY is terminal
+    kk = np.array([op.key for op in ok], np.uint64)
+    fo, vv = f.table.search(kk)
+    assert fo.all()
+    assert (vv == np.array([op.value for op in ok], np.uint32)).all()
+
+
+# -- per-shard fault isolation (host-level, no mesh needed) -------------------
+
+def _stacked_state(tables):
+    import jax.numpy as jnp
+    from repro.core.layout import DashState
+    return DashState(*[jnp.stack([np.asarray(getattr(t.state, n))
+                                  for t in tables])
+                       for n in DashState._fields])
+
+
+def test_shard_fault_isolation(tmp_path):
+    n_shards = 3
+    plans = [FaultPlan(seed=40 + i) for i in range(n_shards)]
+    wbs = persist.create_shard_pools(str(tmp_path), SMALL, n_shards,
+                                     faults=plans)
+    tables = [DashEH(SMALL) for _ in range(n_shards)]
+    rng = np.random.default_rng(4)
+    per = [unique_keys(rng, 200, lo=1 + i * 2**61, hi=(i + 1) * 2**61)
+           for i in range(n_shards)]
+    for t, keys in zip(tables, per):
+        t.insert(keys, _vals(200))
+    st = _stacked_state(tables)
+    persist.flush_shards(st, wbs)
+    # shard 1's device fails hard: only IT degrades, neighbors still flush
+    plans[1].eio_fences[plans[1].fence_calls] = 99
+    tables[0].insert(unique_keys(rng, 50, lo=2**60, hi=2**61), _vals(50))
+    st = _stacked_state(tables)
+    persist.flush_shards(st, wbs)
+    assert [w.degraded for w in wbs] == [False, True, False]
+    n0 = wbs[0].flushes
+    persist.flush_shards(st, wbs)             # degraded shard is skipped
+    assert wbs[0].flushes == n0 + 1 and wbs[1].degraded_flushes >= 1
+    plans[1].eio_fences.clear()
+    assert persist.recover_shards(st, wbs) == 1
+    assert not any(w.degraded for w in wbs)
+    for w in wbs:
+        w.pool.close()
+    # rot shard 0's closed pool (no faults armed while flipping)
+    pools = persist.open_shard_pools(str(tmp_path))
+    FaultPlan(seed=50).flip_bits(pools[0].pool, n=3)
+    for w in pools:
+        w.pool.close()
+    # reopen: transient EIO on one shard is retried away; the flipped shard
+    # quarantines locally and reports ONLY its own keys
+    plans2 = [FaultPlan(seed=50 + i) for i in range(n_shards)]
+    plans2[2].eio_fences[0] = 1
+    st2, wbs2, info = persist.reopen_shards(str(tmp_path), faults=plans2)
+    assert plans2[2].eio_raised == 1
+    assert info["degraded_shards"] == 0
+    assert set(info["lost_reports"]) <= {0}
+    for w in wbs2:
+        bad = w.pool.verify_checksums()
+        assert bad["bt"].size == 0 and bad["nb"].size == 0
+
+
+# -- the chaos matrix ---------------------------------------------------------
+
+def test_chaos_matrix_quick(tmp_path):
+    """Eight seeded schedules with forced tears + flips. ``run_schedule``
+    raises on any safety violation; aggregate coverage is asserted here."""
+    agg = run_many(range(8), str(tmp_path), min_tears=1, min_flips=1)
+    assert agg["schedules"] == 8
+    assert agg["wrong_reads"] == 0 and agg["silent_lost"] == 0
+    assert agg["tears"] >= 8 and agg["flips"] >= 8 and agg["crashes"] >= 8
+    assert agg["flushes"] > 0 and agg["ops"] > 0
+
+
+@pytest.mark.slow
+def test_chaos_matrix_full(tmp_path):
+    """The wide sweep (part of the >=200-schedule evidence alongside
+    benchmarks/chaos.py): 64 seeds, EIO + ENOSPC + tears + flips + scrub +
+    pointer-mode lineages, zero silent wrong reads."""
+    agg = run_many(range(100, 164), str(tmp_path), min_tears=1, min_flips=1)
+    assert agg["schedules"] == 64
+    assert agg["wrong_reads"] == 0 and agg["silent_lost"] == 0
+    assert agg["tears"] >= 64 and agg["eio_raised"] > 0
+    assert agg["degraded_events"] > 0 and agg["pointer_mode"] > 0
+
+
+# -- pointer-mode allocator safety (regression for the heap_top floor) --------
+
+def test_heap_top_floor_guards_reopened_allocator(tmp_path):
+    """Kill a pointer-mode flush at every store boundary; after each torn
+    reopen, KEEP INSERTING. The bump allocator must never re-issue a heap
+    row a published record references (reopen raises heap_top past the
+    highest live handle), so acked keys survive the post-crash inserts."""
+    import dataclasses as dc
+    import shutil
+    from repro.persist import PmPool, WritebackEngine
+    cfg = dc.replace(SMALL, pointer_mode=True, key_heap_size=4096,
+                     key_heap_words=2)
+    from repro.persist.chaos import _words_of
+    p = str(tmp_path / "t.pool")
+    t = persist.create(p, cfg)
+    acked = np.arange(1, 201, dtype=np.uint64)
+    t.insert(values=_vals(200), words=_words_of(acked, 2))
+    t.flush()
+    base = p + ".base"
+    shutil.copyfile(p, base)
+    fresh = np.arange(201, 301, dtype=np.uint64)
+    t.insert(values=_vals(100, base=9000), words=_words_of(fresh, 2))
+    shutil.copyfile(base, p + ".scratch")
+    wb = WritebackEngine(PmPool.open(p + ".scratch"))
+    wb.inject_crash(1 << 30)
+    wb.flush(t.state)
+    ops_total = (1 << 30) - wb._ops_budget
+    post = np.arange(1001, 1101, dtype=np.uint64)
+    for k in range(0, ops_total + 1, 3):
+        shutil.copyfile(base, p)
+        wb = WritebackEngine(PmPool.open(p))
+        wb.inject_crash(k)
+        try:
+            wb.flush(t.state)
+        except SimulatedCrash:
+            pass
+        t2, _ = persist.reopen(p)
+        top = int(np.asarray(t2.state.heap_top))
+        t2.insert(values=_vals(100, base=7000), words=_words_of(post, 2))
+        f, v = t2.search(words=_words_of(acked, 2))
+        assert f.all(), f"cut {k}: post-reopen inserts ate acked keys"
+        assert (v == _vals(200)).all(), f"cut {k}: torn values (top={top})"

@@ -2,6 +2,7 @@
 accounting, flush-on-publish through the serving frontend, per-shard pools,
 and the crash matrix — a torn flush killed at EVERY emulated store boundary
 must reopen to a pool where every previously-acknowledged key is found."""
+import os
 import shutil
 
 import numpy as np
@@ -24,16 +25,22 @@ def _vals(n, base=1):
 # -- pool + layout ------------------------------------------------------------
 
 def test_plane_offset_map_covers_state():
-    specs, log, total = layout.pool_plane_specs(SMALL, "eh")
+    specs, log, csum, total = layout.pool_plane_specs(SMALL, "eh")
     names = [s.name for s in specs]
     assert names == list(layout.DashState._fields)
     # regions are disjoint, ordered, aligned, and inside the file
-    prev_end = layout.SUPERBLOCK_BYTES + log.nbytes
+    prev_end = csum.offset + csum.nbytes
+    assert csum.offset >= layout.SUPERBLOCK_BYTES + log.nbytes
     for s in specs:
         assert s.offset % layout.POOL_ALIGN == 0
         assert s.offset >= prev_end
         prev_end = s.offset + s.nbytes
     assert prev_end <= total
+    # the checksum region covers exactly the record-row planes
+    assert {n for n, _, _ in csum.entries} == set(layout.CSUM_PLANES)
+    by = {s.name: s for s in specs}
+    for n, _, rows in csum.entries:
+        assert rows == by[n].rows
     # row addressing matches the COW publish's row index space
     bt = {s.name: s for s in specs}
     S, BT = SMALL.max_segments, SMALL.buckets_total
@@ -54,11 +61,72 @@ def test_superblock_torn_slot_detected(tmp_path):
         f.write(b"\xff" * 32)
     pool = PmPool.open(p)
     assert pool.sb.flush_seq == seq - 1
-    # a pool with BOTH slots destroyed refuses to open
+    # a pool with BOTH slots destroyed refuses to open with a diagnosable
+    # error (names the superblock validation, not a stack trace)
     with open(p, "r+b") as f:
         f.write(b"\x00" * 4096)
-    with pytest.raises(PoolError):
+    with pytest.raises(PoolError, match="superblock"):
         PmPool.open(p)
+
+
+def test_truncated_pool_file_diagnosed(tmp_path):
+    """A pool file cut short — below the superblock region or anywhere
+    inside the plane regions — must raise a clean, diagnosable PoolError
+    instead of a numpy mapping error or (worse) serving garbage."""
+    p = str(tmp_path / "t.pool")
+    t = persist.create(p, SMALL)
+    t.insert(unique_keys(np.random.default_rng(1), 100), _vals(100))
+    t.flush()
+    t.close()
+    full = os.path.getsize(p)
+    # cut inside the plane region: superblocks are intact and valid
+    with open(p, "r+b") as f:
+        f.truncate(full - 4096)
+    with pytest.raises(PoolError, match="truncated"):
+        PmPool.open(p)
+    with pytest.raises(PoolError, match="truncated"):
+        persist.reopen(p)
+    # cut below even the superblock slots
+    with open(p, "r+b") as f:
+        f.truncate(1024)
+    with pytest.raises(PoolError, match="truncated"):
+        PmPool.open(p)
+
+
+def test_pointer_mode_flush_is_o_dirty_plus_heap_tail(tmp_path):
+    """ISSUE 6 satellite: the append-only key heap's durable high-water
+    mark bounds pointer-mode flushes to O(dirty rows + heap tail) — a
+    small insert batch must not rewrite the whole pool (pre-PR-6 pointer
+    mode forced full flushes)."""
+    import dataclasses as dc
+    cfg = dc.replace(SMALL, pointer_mode=True, key_heap_size=4096,
+                     key_heap_words=2)
+
+    def words_of(lo, hi):
+        ks = np.arange(lo, hi, dtype=np.uint64)
+        out = np.zeros((ks.size, 2), np.uint32)
+        out[:, 0] = (ks & np.uint64(0xFFFFFFFF)).astype(np.uint32)
+        out[:, 1] = (ks >> np.uint64(32)).astype(np.uint32)
+        return out
+
+    p = str(tmp_path / "t.pool")
+    t = persist.create(p, cfg)
+    t.insert(values=_vals(600), words=words_of(1, 601))
+    t.flush()
+    wb = t.writeback
+    # incremental batch: flushed bytes ≪ pool, heap tail exactly the batch
+    t.insert(values=_vals(48, base=9000), words=words_of(601, 649))
+    before = wb.flushed_bytes
+    t.flush()
+    delta = wb.flushed_bytes - before
+    assert wb.last_heap_tail_rows == 48
+    assert delta < wb.pool.plane_bytes // 4, \
+        f"pointer-mode flush not incremental: {delta} bytes"
+    t.close()
+    t2, info = persist.reopen(p)
+    f, v = t2.search(words=words_of(1, 649))
+    assert f.all()
+    assert (v == np.concatenate([_vals(600), _vals(48, base=9000)])).all()
 
 
 @pytest.mark.parametrize("mode,cfg", [
@@ -220,11 +288,12 @@ def test_torn_flush_matrix(tmp_path, workload):
 
 
 def test_torn_flush_after_logged_flush(tmp_path):
-    """Two consecutive SMO-logged flushes: the base commit still carries
-    its redo-log descriptor, and the torn flush OVERWRITES the log region
-    before ever committing. Reopen must recognize the stale descriptor
-    (checksum mismatch => the committed log was already applied) instead of
-    refusing to open — regression for a bricked-pool bug."""
+    """Two consecutive SMO-logged flushes. Since the phase-8 retiring
+    commit (PR 6) a COMPLETED logged flush leaves no descriptor behind
+    (``sb.log_bt == 0`` — a descriptor that fails its CRC at open is
+    therefore real media loss, ``pool.log_lost``, never staleness). The
+    second flush's cut sweep still covers every commit/apply/retire
+    window: reopen must never refuse the pool and never lose acked keys."""
     rng = np.random.default_rng(23)
     keys = unique_keys(rng, 2200)
     p = str(tmp_path / "t.pool")
@@ -233,7 +302,9 @@ def test_torn_flush_after_logged_flush(tmp_path):
     t.flush()
     t.insert(keys[500:1100], _vals(600, base=3000))   # drives bulk splits
     t.flush()
-    assert t.writeback.pool.sb.log_bt > 0            # base commit is logged
+    assert t.writeback.logged_rows > 0               # base commit was logged
+    assert t.writeback.pool.sb.log_bt == 0           # ...and retired (ph. 8)
+    assert not t.writeback.pool.log_lost
     base = p + ".base"
     shutil.copyfile(p, base)
     acked = keys[:1100]
@@ -244,14 +315,15 @@ def test_torn_flush_after_logged_flush(tmp_path):
     for k in range(ops_total + 1):
         shutil.copyfile(base, p)
         wb = WritebackEngine(PmPool.open(p))
-        assert wb.pool.sb.log_bt > 0
+        assert wb.pool.sb.log_bt == 0                # no stale descriptor
         wb.inject_crash(k)
         try:
             wb.flush(t.state)
             assert k >= ops_total
         except SimulatedCrash:
             assert k < ops_total
-        t2, _ = persist.reopen(p)                    # must never PoolError
+        t2, info = persist.reopen(p)                 # must never PoolError
+        assert not info["log_lost"]                  # crash-only: no media rot
         f, v = t2.search(acked)
         assert f.all(), f"cut {k}: lost {int((~f).sum())} acked keys"
         assert (v == acked_vals).all(), f"cut {k}: torn values"
