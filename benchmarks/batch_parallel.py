@@ -7,12 +7,20 @@ regime the paper's per-segment concurrency argument addresses; a fresh
 2-segment table has no parallelism to exploit and the host planner keeps it
 on the scan engine).
 
-Before timing, asserts the two write engines produce bit-identical table
-state + statuses and the two read paths identical results — the bench is
+Small-batch LATENCY rows (p50/p99 per dispatch at batch 64/256) compare the
+fused single-dispatch path (kernels/fused.py) against the routed engines and
+the per-key baselines — the regime ``DashTable.fused_threshold`` selects
+for. Gated: at batch 256 the fused search must not lose to vmap (>= 1.0x at
+p50) and the fused insert must beat the scan engine >= 1.5x at p50, with
+fused-vs-scan bit-identity asserted before any timing.
+
+Before timing, asserts the write engines produce bit-identical table
+state + statuses and the read paths identical results — the bench is
 also a differential check. Emits ``BENCH_batch_parallel.json``.
 """
 from __future__ import annotations
 
+import time
 
 import jax
 import jax.numpy as jnp
@@ -25,6 +33,28 @@ from .common import (Row, enable_compilation_cache, write_artifact,
 ARTIFACT = "BENCH_batch_parallel.json"
 
 BATCHES = (256, 1024, 4096)
+#: small-batch latency regime (the fused path's home turf)
+LAT_BATCHES = (64, 256)
+LAT_REPS = 25
+
+
+def _latencies(fn, reps: int = LAT_REPS, warmup: int = 3) -> np.ndarray:
+    """Per-call wall seconds over ``reps`` dispatches (fn must block).
+    More warmup than ``time_op``: the latency quantiles are about steady
+    state, and the first post-trace calls still page executables in."""
+    for _ in range(warmup):
+        fn()
+    out = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        out.append(time.perf_counter() - t0)
+    return np.asarray(out)
+
+
+def _pctl(lat: np.ndarray) -> dict:
+    return {"p50_ms": float(np.percentile(lat, 50) * 1e3),
+            "p99_ms": float(np.percentile(lat, 99) * 1e3)}
 
 
 def _copy_state(state):
@@ -103,6 +133,82 @@ def run():
             ops_row(f"batchpar/search_pallas@{B}", t_pall, B,
                     extra=f"{t_vmap / t_pall:.2f}x vs vmap"),
         ]
+
+    # ----- small-batch latency: fused vs routed vs per-key baselines -----
+    for B in LAT_BATCHES:
+        keys = fresh[:B]
+        hi_np, lo_np = hashing.np_split_keys(keys)
+        hi, lo = jnp.asarray(hi_np), jnp.asarray(lo_np)
+        vals = jnp.asarray(np.arange(B, dtype=np.uint32))
+        seg = t._segments_of(hi_np, lo_np)
+        cap = t._lane_quantum(t._max_per_segment(seg))
+
+        # bit-identity BEFORE timing: the fused mega-dispatch must agree
+        # with the scan engine (writes) and the vmap path (reads) exactly
+        s_scan, st_scan, _ = engine.insert_batch(
+            cfg, "eh", _copy_state(base), hi, lo, vals, batching="scan")
+        s_fus, st_fus, _ = engine.insert_batch(
+            cfg, "eh", _copy_state(base), hi, lo, vals,
+            batching="fused", capacity=cap)
+        assert (np.asarray(st_scan) == np.asarray(st_fus)).all(), B
+        _assert_identical(s_scan, s_fus, f"fused_insert@{B}")
+        f_v, v_v = engine.search_batch(cfg, "eh", s_scan, hi, lo,
+                                       batching="vmap")
+        f_f, v_f = engine.search_batch(cfg, "eh", s_scan, hi, lo,
+                                       batching="fused")
+        assert (np.asarray(f_v) == np.asarray(f_f)).all(), B
+        assert (np.asarray(v_v) == np.asarray(v_f)).all(), B
+
+        lat_ins = {
+            "fused": _latencies(lambda: jax.block_until_ready(
+                engine.insert_batch(cfg, "eh", _copy_state(base), hi, lo,
+                                    vals, batching="fused",
+                                    capacity=cap)[0].meta)),
+            "routed": _latencies(lambda: jax.block_until_ready(
+                engine.insert_batch(cfg, "eh", _copy_state(base), hi, lo,
+                                    vals, batching="segment",
+                                    capacity=cap)[0].meta)),
+            "scan": _latencies(lambda: jax.block_until_ready(
+                engine.insert_batch(cfg, "eh", _copy_state(base), hi, lo,
+                                    vals, batching="scan")[0].meta)),
+        }
+        lat_sea = {
+            "fused": _latencies(lambda: jax.block_until_ready(
+                engine.search_batch(cfg, "eh", base, hi, lo,
+                                    batching="fused")[0])),
+            "routed": _latencies(lambda: jax.block_until_ready(
+                engine.search_batch(cfg, "eh", base, hi, lo,
+                                    batching="pallas",
+                                    capacity=cap_pallas(cap))[0])),
+            "vmap": _latencies(lambda: jax.block_until_ready(
+                engine.search_batch(cfg, "eh", base, hi, lo,
+                                    batching="vmap")[0])),
+        }
+        ins_x = float(np.percentile(lat_ins["scan"], 50)
+                      / np.percentile(lat_ins["fused"], 50))
+        sea_x = float(np.percentile(lat_sea["vmap"], 50)
+                      / np.percentile(lat_sea["fused"], 50))
+        report[f"latency_{B}"] = {
+            "lane_capacity": cap,
+            "insert": {k: _pctl(v) for k, v in lat_ins.items()},
+            "search": {k: _pctl(v) for k, v in lat_sea.items()},
+            "insert_fused_vs_scan_p50": ins_x,
+            "search_fused_vs_vmap_p50": sea_x,
+        }
+        for op, lats in (("insert", lat_ins), ("search", lat_sea)):
+            for path, lat in lats.items():
+                q = _pctl(lat)
+                rows.append(Row(
+                    f"batchpar/latency_{op}_{path}@{B}",
+                    q["p50_ms"] * 1e3,
+                    f"p50={q['p50_ms']:.3f}ms p99={q['p99_ms']:.3f}ms"))
+        if B == 256:
+            # acceptance gates: the fused path must pay for itself exactly
+            # where the threshold routes to it
+            assert sea_x >= 1.0, \
+                f"fused search {sea_x:.2f}x vmap at 256 (gate >= 1.0)"
+            assert ins_x >= 1.5, \
+                f"fused insert {ins_x:.2f}x scan at 256 (gate >= 1.5)"
 
     write_artifact(ARTIFACT, report)
     return rows

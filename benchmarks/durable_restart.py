@@ -116,6 +116,7 @@ def _storm(tmp: str):
     fe = DashFrontend(t, max_batch=STORM_BATCH, queue_depth=1 << 16)
     wb = t.writeback
     base_bytes, base_flushes = wb.flushed_bytes, wb.flushes
+    base_staged = wb.staged_bytes
     base_pub = fe.registry.publish_bytes
     per_batch = []
     splits0 = int(np.asarray(t.state.n_splits))
@@ -128,11 +129,14 @@ def _storm(tmp: str):
         per_batch.append(wb.flushed_bytes - b0)
     flushes = wb.flushes - base_flushes
     flushed = wb.flushed_bytes - base_bytes
+    staged = wb.staged_bytes - base_staged
     return {
         "splits": int(np.asarray(t.state.n_splits)) - splits0,
         "flushes": flushes,
         "flushed_bytes": flushed,
         "flushed_bytes_per_batch": flushed / max(len(per_batch), 1),
+        "staged_bytes": staged,
+        "staged_ratio": staged / max(flushes * wb.pool.plane_bytes, 1),
         "publish_bytes": fe.registry.publish_bytes - base_pub,
         "pool_bytes": wb.pool.plane_bytes,
         "whole_pool_volume": flushes * wb.pool.plane_bytes,
@@ -248,6 +252,10 @@ def run():
                         storm["volume_ratio"],
                         f"{storm['flushed_bytes_per_batch']:.0f}B/batch vs "
                         f"{storm['pool_bytes']}B whole-pool"))
+        rows.append(Row("durable/flush_staged_ratio",
+                        storm["staged_ratio"],
+                        "host bytes materialized per flush vs whole-pool "
+                        "copy (gate <= 0.25)"))
 
         torn = _torn(tmp)
         report["torn"] = torn
@@ -260,6 +268,10 @@ def run():
             + ", ".join(f"n{n}={s*1e3:.1f}ms" for n, s in ttfqs.items())
         assert storm["volume_ratio"] <= 0.25, \
             f"flush volume ratio {storm['volume_ratio']:.3f} > 0.25"
+        # host staging rides the same O(dirty) budget: the flush gathers
+        # dirty record rows on device and never np.asarray's a wide plane
+        assert storm["staged_ratio"] <= 0.25, \
+            f"host-staged ratio {storm['staged_ratio']:.3f} > 0.25"
         assert storm["flush_hint_misses"] == 0
         assert vc["ratio"] <= 1.5, \
             f"checksummed reopen {vc['ratio']:.2f}x > 1.5x plain reopen"

@@ -19,7 +19,9 @@ Modules map 1:1 to the paper's artifacts:
   fig15  allocator            preallocated pool vs grow-on-demand
   extra  dht_roofline         256-chip DHT fabric-vs-HBM accounting
   extra  kernel_probe         Pallas probe path timing (interpret)
-  extra  batch_parallel       segment-parallel vs scan engine (+ JSON artifact)
+  extra  batch_parallel       segment-parallel vs scan engine + small-batch
+                              fused-path p50/p99 latency rows — also under
+                              the ``latency`` tag (+ JSON artifact)
   extra  smo                  bulk vs scalar split/merge SMOs (+ JSON artifact)
   extra  online_resize        frontend vs stop-the-world p50/p99 during a
                               split storm (+ JSON artifact)
@@ -49,7 +51,7 @@ MODULES = [
     ("fig15", "benchmarks.allocator"),
     ("dht", "benchmarks.dht_roofline"),
     ("kernel", "benchmarks.kernel_probe"),
-    ("batchpar", "benchmarks.batch_parallel"),
+    ("batchpar|latency", "benchmarks.batch_parallel"),
     ("smo", "benchmarks.smo"),
     ("resize", "benchmarks.online_resize"),
     ("chaos", "benchmarks.chaos"),
@@ -97,7 +99,7 @@ def main() -> None:
     if args.list:
         print("tag,module,artifact,status")
         for tag, modname in MODULES:
-            if only and tag not in only:
+            if only and not (set(tag.split("|")) & only):
                 continue
             mod = importlib.import_module(modname)
             artifact = getattr(mod, "ARTIFACT", None)
@@ -109,7 +111,7 @@ def main() -> None:
     print("name,us_per_call,derived")
     failures = []
     for tag, modname in MODULES:
-        if only and tag not in only:
+        if only and not (set(tag.split("|")) & only):
             continue
         t0 = time.time()
         try:

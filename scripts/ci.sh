@@ -12,6 +12,9 @@
 #   5. chaos smoke             (one seeded fault schedule: forced torn
 #                               persist + bit flips + crash reopen; zero
 #                               wrong reads / silent losses, <~30s)
+#   6. fused smoke             (batch-256 insert+search through the fused
+#                               single-dispatch path, bit-identical to the
+#                               scan/vmap references)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -74,6 +77,38 @@ assert r.wrong_reads == 0 and r.silent_lost == 0   # run_schedule asserts too
 assert r.tears >= 1 and r.flips >= 3 and r.crashes >= 1
 print(f"chaos smoke OK: seed={r.seed} ops={r.ops} tears={r.tears} "
       f"flips={r.flips} crashes={r.crashes} reported_lost={r.reported_lost}")
+PY
+
+echo "== fused smoke (batch-256 single-dispatch == scan/vmap) =="
+python - <<'PY'
+import jax, numpy as np
+import jax.numpy as jnp
+from repro.core import DashConfig, engine, hashing, layout
+cfg = DashConfig(max_segments=16, dir_depth_max=8)
+keys = np.unique(np.random.default_rng(0xF5).integers(1, 2**63, 1200,
+                                                      np.uint64))[:512]
+hi, lo = hashing.np_split_keys(keys)
+hi, lo = jnp.asarray(hi), jnp.asarray(lo)
+vals = jnp.asarray(np.arange(512, dtype=np.uint32) + 1)
+s_scan = layout.make_state(cfg, "eh")
+s_fus = jax.tree.map(jnp.copy, s_scan)
+for i in range(0, 512, 256):        # two fused batch-256 insert dispatches
+    sl = slice(i, i + 256)
+    s_scan, st1, _ = engine.insert_batch(cfg, "eh", s_scan, hi[sl], lo[sl],
+                                         vals[sl], batching="scan")
+    s_fus, st2, _ = engine.insert_batch(cfg, "eh", s_fus, hi[sl], lo[sl],
+                                        vals[sl], batching="fused")
+    assert (np.asarray(st1) == np.asarray(st2)).all()
+for a, b in zip(jax.tree.leaves(s_scan), jax.tree.leaves(s_fus)):
+    assert (np.asarray(a) == np.asarray(b)).all()
+f1, v1 = engine.search_batch(cfg, "eh", s_scan, hi[:256], lo[:256],
+                             batching="vmap")
+f2, v2 = engine.search_batch(cfg, "eh", s_fus, hi[:256], lo[:256],
+                             batching="fused")
+assert np.asarray(f2).all()
+assert (np.asarray(f1) == np.asarray(f2)).all()
+assert (np.asarray(v1) == np.asarray(v2)).all()
+print("fused smoke OK: 512 inserts + 256 searches bit-identical")
 PY
 
 echo "CI OK"

@@ -503,7 +503,9 @@ def insert_batch(cfg: DashConfig, mode: str, state: DashState,
     any_stash_activation).
 
     ``batching="segment"`` (default) routes by segment and runs all segments
-    in parallel; ``"scan"`` is the sequential reference. Both produce
+    in parallel; ``"scan"`` is the sequential reference; ``"fused"`` is the
+    single-dispatch merged-commit path (kernels/fused.py) the table planner
+    selects for small batches. All produce
     bit-identical table state and statuses when ``capacity`` covers the
     largest per-segment lane count (the host wrapper sizes it exactly;
     the default ``capacity=None`` -> next pow2 >= batch covers any skew).
@@ -519,6 +521,10 @@ def insert_batch(cfg: DashConfig, mode: str, state: DashState,
         words = _dummy_words(cfg, n)
     if valid is None:
         valid = jnp.ones(n, jnp.bool_)
+    if batching == "fused":
+        from repro.kernels import fused
+        return fused.fused_insert(cfg, mode, state, keys_hi, keys_lo, vals,
+                                  words, valid, capacity)
     if batching == "scan" or cfg.pointer_mode:
         return _insert_batch_scan(cfg, mode, state, keys_hi, keys_lo, vals,
                                   words, valid)
@@ -565,13 +571,19 @@ def search_batch(cfg: DashConfig, mode: str, state: DashState,
 
     Default read path is the Pallas fingerprint kernel over segment-routed
     lanes (``batching="pallas"``); ``"vmap"`` is the per-key path, used
-    automatically for configs the kernel does not cover. On non-TPU hosts
+    automatically for configs the kernel does not cover; ``"fused"`` is the
+    single-dispatch latency path (kernels/fused.py) the table planner
+    selects for small batches. On non-TPU hosts
     the pallas mode runs the kernel's direct-addressed jnp lowering
     (``kernels/ops.py:probe_direct``) — same fingerprint-first read
     discipline, no per-segment lane planes (those are the TPU VMEM
     blocking)."""
     if words is None:
         words = _dummy_words(cfg, keys_hi.shape[0])
+    if batching == "fused":
+        from repro.kernels import fused
+        return fused.fused_search(cfg, mode, state, keys_hi, keys_lo, words,
+                                  capacity)
     if batching == "pallas" and not pallas_search_eligible(cfg):
         batching = "vmap"      # fingerprint path would silently miss records
     if batching == "auto":

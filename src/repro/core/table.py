@@ -15,6 +15,8 @@ from typing import Optional
 import numpy as np
 import jax.numpy as jnp
 
+from repro.kernels import ops
+
 from . import dash_eh, dash_lh, engine, hashing, layout, recovery, smo
 from .epoch import DirtyHint
 from .layout import (EXISTS, INSERTED, NEED_SPLIT, NOT_FOUND, DashConfig,
@@ -91,6 +93,14 @@ class InsertJob:
         return self.pending.size == 0
 
 
+# Largest batch that takes the fused single-dispatch latency path by
+# default. Calibrated on the batch_parallel latency rows: at 256 the fused
+# insert ran ~6x the scan engine and the fused read ~1.3x vmap on CPU; by
+# 4096 the routed/segment engines win on throughput. 1024 is the crossover
+# region's conservative edge.
+FUSED_THRESHOLD_DEFAULT = 1024
+
+
 class DashTable:
     """Shared host logic; subclasses define addressing + pressure handling.
 
@@ -104,8 +114,17 @@ class DashTable:
 
     def __init__(self, cfg: DashConfig, lazy_recovery: bool = True,
                  smo_mode: str = "bulk",
-                 state: Optional[DashState] = None):
+                 state: Optional[DashState] = None,
+                 fused_threshold: Optional[int] = None):
         self.cfg = cfg
+        # batches at or under this size take the fused single-dispatch
+        # latency path (kernels/fused.py); 0 forces the routed/vmap paths,
+        # a huge value forces fused everywhere. Default calibrated by
+        # benchmarks/batch_parallel.py's latency rows (see README
+        # "Latency path").
+        self.fused_threshold = (FUSED_THRESHOLD_DEFAULT
+                                if fused_threshold is None
+                                else int(fused_threshold))
         # `state` restores a persisted table (persist.reopen) without
         # paying a throwaway full-pool allocation
         self.state: DashState = state if state is not None \
@@ -177,26 +196,36 @@ class DashTable:
         live = seg[seg >= 0]
         return int(np.bincount(live).max()) if live.size else 1
 
-    def _write_plan(self, seg: np.ndarray, n_total: int):
+    def _write_plan(self, seg: np.ndarray, n_total: int, fused_ok: bool = True):
         """(batching, capacity) for a mutating batch, from the per-key
         segment ids (computed once per op, shared with lazy recovery).
 
         The host sees the directory, so it can size the per-segment lane
         capacity exactly (max keys routed to one segment — padding lanes sit
         after real keys in batch order, so they can only overflow, never
-        displace). Segment-parallel wins when the critical path (capacity)
-        is meaningfully shorter than the batch; a freshly-created table with
-        2 segments has no parallelism to exploit, so it stays on the scan
-        engine until splits spread the directory."""
+        displace). Small batches (<= ``fused_threshold``) take the fused
+        merged-commit path — one dispatch, no per-lane branch merging —
+        sized with the same exact lane capacity. Segment-parallel wins when
+        the critical path (capacity) is meaningfully shorter than the batch;
+        a freshly-created table with 2 segments has no parallelism to
+        exploit, so it stays on the scan engine until splits spread the
+        directory. ``fused_ok=False`` (delete/update, which have no fused
+        engine) skips the latency path."""
         capacity = self._lane_quantum(self._max_per_segment(seg))
+        if (fused_ok and n_total <= self.fused_threshold
+                and ops.fused_insert_eligible(self.cfg)):
+            return "fused", capacity
         if capacity * 4 <= self._pow2(n_total):
             return "segment", capacity
         return "scan", None
 
     def _search_plan(self, seg: np.ndarray):
-        """(batching, capacity) for a read batch: Pallas fingerprint path for
-        large batches on eligible configs, per-key vmap otherwise (kernel
-        launch overhead dominates tiny batches)."""
+        """(batching, capacity) for a read batch: the fused single-dispatch
+        path for small batches (its whole point is killing per-stage launch
+        overhead), the Pallas fingerprint path for large batches on eligible
+        configs, per-key vmap otherwise."""
+        if seg.size <= self.fused_threshold and ops.fused_search_eligible(self.cfg):
+            return "fused", None
         if seg.size >= 256 and engine.pallas_search_eligible(self.cfg):
             return "pallas", self._pow2(self._max_per_segment(seg), floor=128)
         return "vmap", None
@@ -250,7 +279,7 @@ class DashTable:
             idx = np.concatenate([pending, np.zeros(n - pending.size, np.int64)])
             valid = jnp.asarray(np.arange(n) < pending.size)
         batching, capacity = self._write_plan(seg, idx.size)
-        if batching == "segment":
+        if batching in ("segment", "fused"):
             # sticky lane capacity: splits shrink the per-segment max
             # every retry round, and each fresh capacity is a fresh jit
             # trace — reusing the first round's (clamped to the padded
@@ -306,7 +335,7 @@ class DashTable:
         seg = self._segments_of(hi, lo)
         self._ensure_recovered(seg)
         self.dirty.note_segments(seg)
-        batching, capacity = self._write_plan(seg, seg.size)
+        batching, capacity = self._write_plan(seg, seg.size, fused_ok=False)
         self.state, statuses = engine.delete_batch(
             self.cfg, self.mode, self.state, hi, lo, w,
             batching=batching, capacity=capacity)
@@ -318,7 +347,7 @@ class DashTable:
         self._ensure_recovered(seg)
         self.dirty.note_segments(seg)
         vals = jnp.asarray(np.asarray(values, dtype=np.uint32))
-        batching, capacity = self._write_plan(seg, seg.size)
+        batching, capacity = self._write_plan(seg, seg.size, fused_ok=False)
         self.state, statuses = engine.update_batch(
             self.cfg, self.mode, self.state, hi, lo, vals, w,
             batching=batching, capacity=capacity)

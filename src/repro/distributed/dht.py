@@ -90,9 +90,12 @@ def build_dht_ops(cfg: DashConfig, mesh: Mesh, axes=("data",),
 
     ``search_batching`` selects the shard-local read path; shards are
     ordinary Dash tables, so the Pallas fingerprint path applies verbatim
-    (pass "pallas"/"auto" on TPU). The CPU default stays on the per-key
-    path: interpret-mode MXU gathers lose on emulated devices, and the
-    all_to_all padding lanes (key 0) would pile onto one segment."""
+    (pass "pallas"/"auto" on TPU) and so does the fused single-dispatch
+    probe (pass "fused" — the natural fit for the small shard-local
+    sub-batch, and its direct gather is indifferent to the all_to_all
+    padding lanes piling onto key 0's segment). The CPU default stays on
+    the per-key path: interpret-mode MXU gathers lose on emulated
+    devices, and routed paths would re-bucket the padding lanes."""
     axes = tuple(axes)
     n_shards = int(np.prod([mesh.shape[a] for a in axes]))
     if capacity is None:

@@ -20,6 +20,11 @@ it replaced, so routing cost scales with batch size, not directory size.
 bit-identical jnp lowerings — the Pallas interpreter's per-program overhead
 is not the hot path's job; on TPU pass interpret=False, shapes/BlockSpecs
 are already MXU/VPU aligned.
+
+The fused small-batch latency path (kernels/fused.py) is re-exported here:
+``fused_search`` / ``fused_insert`` collapse the route->probe->verify /
+route->probe->hint->scatter pipelines into one dispatch — the path the
+table planner picks when a batch is at or under its fused threshold.
 """
 from __future__ import annotations
 
@@ -31,6 +36,9 @@ import jax.numpy as jnp
 from repro.core import hashing, layout
 from repro.core.layout import DashConfig, DashState
 from . import probe as probe_kernel
+from .fused import (fused_insert, fused_insert_eligible,  # noqa: F401
+                    fused_kernel_eligible, fused_probe, fused_probe_jnp,
+                    fused_search, fused_search_eligible)
 from .hashmix import BLOCK, bulk_hash
 from .probe import LANES, NSLOTS, ROWS, fingerprint_probe
 

@@ -305,11 +305,13 @@ class PmPool:
             n += 4 * s.rows
         return n
 
-    def write_span(self, name: str, lo: int, hi: int, live: np.ndarray
+    def write_span(self, name: str, lo: int, hi: int, tail: np.ndarray
                    ) -> int:
         """Overwrite the contiguous leading-axis span ``[lo, hi)`` of one
-        plane (the pointer-mode key heap's append-only tail). One emulated
-        store op; returns bytes written."""
+        plane with ``tail`` — the span's rows only (shape ``(hi-lo, ...)``),
+        so the caller stages just the pointer-mode key heap's append-only
+        tail, never the whole heap. One emulated store op; returns bytes
+        written."""
         if hi <= lo:
             return 0
         s = self._by_name[name]
@@ -317,7 +319,7 @@ class PmPool:
         per_row = s.nbytes // view.shape[0]
         if self._journaling():
             self._j_span(s.offset + lo * per_row, (hi - lo) * per_row)
-        view[lo:hi] = live.reshape(view.shape)[lo:hi]
+        view[lo:hi] = np.asarray(tail).reshape(view[lo:hi].shape)
         return (hi - lo) * per_row
 
     def fence(self):

@@ -12,6 +12,18 @@ pointer-mode key heap carries no version words but is append-only, so its
 tail above the pool's durable ``heap_top`` is the exact dirty set —
 pointer-mode flushes are O(dirty rows + heap tail), not O(pool).
 
+Host staging is O(dirty) too, not just the pool I/O: the wide record planes
+(key/value/fingerprint/overflow-fingerprint — ~95% of the pool's bytes) are
+never ``np.asarray``'d whole. Once the version diff names the dirty rows, a
+jitted device gather (``_gather_rows``) pulls exactly those rows and only
+they cross the host boundary, wrapped in row-indexable ``_GatheredRows``
+proxies the phase writes and the redo-log encoder index like full planes.
+Only the narrow planes (4-byte publish words, routing, scalars) are copied
+whole; the pointer-mode heap is device-sliced at its tail. ``staged_bytes``
+/ ``last_staged_bytes`` count every host-materialized byte — the
+observability surface tests/test_persist.py's staged≈flushed assertion and
+the durable-restart split-storm gate audit.
+
 **Crash consistency.** Every dirty bucket row is classified against the
 pool's current contents:
 
@@ -80,6 +92,8 @@ from __future__ import annotations
 import time
 from typing import Optional
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import layout
@@ -94,6 +108,50 @@ DATA_BT = ("fp", "key_hi", "key_lo", "val")
 #: publish planes: the meta word is the visibility point; version is the
 #: dirty-diff ground truth and lands LAST so a torn row is re-flushed
 PUBLISH_BT = ("meta", "version")
+
+#: big record planes (wide rows — ~95% of the pool's bytes): staged
+#: host-side at DIRTY-ROW granularity via a device gather, never copied
+#: whole. Everything else (4-byte-row publish planes, routing, scalars)
+#: is copied whole per flush — a few percent of the pool.
+GATHER_BT = DATA_BT
+GATHER_NB = ("ofp",)
+
+
+@jax.jit
+def _gather_rows(planes, ids):
+    """Device-side dirty-row gather: one take per (pre-reshaped) plane.
+    ``ids`` is pow2-padded so the trace count stays bounded; pad lanes
+    read row 0 and are sliced off host-side."""
+    return tuple(jnp.take(p, ids, axis=0, mode="clip") for p in planes)
+
+
+class _GatheredRows:
+    """Row-indexable stand-in for a full host copy of one record plane:
+    holds only the gathered dirty rows. Supports exactly the access
+    patterns of the flush and of ``PmPool.write_rows`` / ``_encode_log``
+    — fancy-index by any subset of the gathered ids, plus a
+    shape-preserving ``reshape`` (the row-major layout is already the
+    gathered one). Indexing an id that was not gathered is a staging
+    bug, not a fallback — it asserts."""
+
+    def __init__(self, ids: np.ndarray, rows: np.ndarray):
+        self._ids = ids               # sorted (flatnonzero order)
+        self._rows = rows             # (ids.size, row_elems)
+        self.shape = rows.shape
+        self.dtype = rows.dtype
+
+    def __getitem__(self, ids):
+        ids = np.asarray(ids)
+        flat = ids.reshape(-1)
+        pos = np.searchsorted(self._ids, flat)
+        if flat.size:
+            hit = np.minimum(pos, self._ids.size - 1)
+            assert np.array_equal(self._ids[hit], flat), \
+                "row indexed outside the gathered dirty set"
+        return self._rows[pos].reshape(ids.shape + self._rows.shape[1:])
+
+    def reshape(self, *shape):
+        return self                   # rows are already row-major
 
 
 class SimulatedCrash(RuntimeError):
@@ -136,6 +194,8 @@ class WritebackEngine:
         self.flushes = 0
         self.flushed_bytes = 0
         self.last_flush_bytes = 0
+        self.staged_bytes = 0         # host bytes materialized from device
+        self.last_staged_bytes = 0    # ... by the last flush (O(dirty) gate)
         self.last_flush_rows = 0      # per-plane row writes of the last flush
         self.last_dirty_rows = 0      # distinct dirty bucket rows last flush
         self.last_heap_tail_rows = 0  # pointer-mode heap rows of last flush
@@ -172,6 +232,32 @@ class WritebackEngine:
         self.last_flush_bytes += nbytes
         self.flushed_rows += rows
         self.last_flush_rows += rows
+
+    def _stage(self, arr: np.ndarray) -> np.ndarray:
+        """Materialize one device array host-side, counting the bytes —
+        the flush's host-staging cost the O(dirty) gate audits."""
+        out = np.asarray(arr)
+        self.staged_bytes += out.nbytes
+        self.last_staged_bytes += out.nbytes
+        return out
+
+    def _stage_gathered(self, state: DashState, names, ids: np.ndarray
+                        ) -> dict:
+        """Stage ONLY the dirty rows of the big record planes: one jitted
+        device gather over the pow2-padded id vector, one host transfer
+        per plane of just those rows. Returns row-indexable proxies."""
+        pad = 1
+        while pad < max(int(ids.size), 1):
+            pad <<= 1
+        idp = np.zeros(pad, dtype=np.int64)
+        idp[:ids.size] = ids
+        planes = tuple(
+            jnp.reshape(jnp.asarray(getattr(state, n)),
+                        (self.pool.spec(n).rows, -1))
+            for n in names)
+        out = _gather_rows(planes, jnp.asarray(idp))
+        return {n: _GatheredRows(ids, self._stage(g)[:ids.size])
+                for n, g in zip(names, out)}
 
     def _write_rows(self, name: str, ids: np.ndarray, live: np.ndarray):
         if ids.size == 0:
@@ -256,10 +342,19 @@ class WritebackEngine:
         self.last_flush_bytes = 0
         self.last_flush_rows = 0
         self.last_heap_tail_rows = 0
+        self.last_staged_bytes = 0
         cfg = self.cfg
         NB, BT, SL = cfg.num_buckets, cfg.buckets_total, cfg.num_slots
 
-        live = {n: np.asarray(getattr(state, n)) for n in DashState._fields}
+        # host staging is O(dirty), not O(pool): only the narrow planes
+        # (4-byte rows, routing, scalars — a few percent of the pool) are
+        # copied whole; the wide record planes are staged row-granularly
+        # by a device gather once the dirty set is known. The pointer-mode
+        # key heap is device-sliced at its tail (never copied whole).
+        small = tuple(n for n in DashState._fields
+                      if n not in GATHER_BT + GATHER_NB
+                      and not (n == "key_heap" and cfg.pointer_mode))
+        live = {n: self._stage(getattr(state, n)) for n in small}
         full = (self.pool.sb.flush_seq == 0
                 or (hint is not None and hint.full))
 
@@ -281,6 +376,8 @@ class WritebackEngine:
             seen = set(np.unique(seg_of).tolist())
             self.flush_hint_misses += len(seen - hint.segments)
 
+        live.update(self._stage_gathered(state, GATHER_BT, ids_bt))
+        live.update(self._stage_gathered(state, GATHER_NB, ids_nb))
         rowview = {n: live[n].reshape(self.pool.spec(n).rows, -1)
                    for n in DATA_BT + PUBLISH_BT + layout.NB_PLANES}
 
@@ -327,11 +424,14 @@ class WritebackEngine:
             disk_top = int(self.pool.plane("heap_top")[()])
             live_top = int(live["heap_top"])
             lo = 0 if full else max(0, min(disk_top, live_top))
-            hi = int(live["key_heap"].shape[0]) if full else live_top
+            hi = int(state.key_heap.shape[0]) if full else live_top
             if hi > lo:
+                # device-sliced tail: stage the [lo, hi) rows only — the
+                # heap is append-only, so everything below lo is already
+                # durable and never crosses the host boundary again
+                tail = self._stage(state.key_heap[lo:hi])
                 self._store()
-                self._account(self.pool.write_span("key_heap", lo, hi,
-                                                   live["key_heap"]))
+                self._account(self.pool.write_span("key_heap", lo, hi, tail))
                 self.last_heap_tail_rows = hi - lo
         self._fence()
 
@@ -413,6 +513,8 @@ class WritebackEngine:
             "flushes": self.flushes,
             "flushed_bytes": self.flushed_bytes,
             "last_flush_bytes": self.last_flush_bytes,
+            "staged_bytes": self.staged_bytes,
+            "last_staged_bytes": self.last_staged_bytes,
             "flushed_rows": self.flushed_rows,
             "last_dirty_rows": self.last_dirty_rows,
             "last_heap_tail_rows": self.last_heap_tail_rows,
@@ -455,7 +557,7 @@ class Scrubber:
         self.mismatched_rows = 0
         self.repaired_rows = 0
 
-    def _scrub_group(self, names, lo, hi, live) -> int:
+    def _scrub_group(self, names, lo, hi, state) -> int:
         pool = self.wb.pool
         ids = np.arange(lo, hi, dtype=np.int64)
         repaired = 0
@@ -464,7 +566,9 @@ class Scrubber:
             bad = ids[have != pool.csum_rows(n)[ids]]
             if bad.size:
                 self.mismatched_rows += int(bad.size)
-                rows = live[n].reshape(pool.spec(n).rows, -1)
+                # repair needs the live bytes of the BAD rows only — a
+                # device gather of those rows, not a whole-plane copy
+                rows = self.wb._stage_gathered(state, (n,), bad)[n]
                 pool.write_rows(n, bad, rows)
                 repaired += int(bad.size)
         return repaired
@@ -479,15 +583,14 @@ class Scrubber:
             return {"scanned": 0, "repaired": 0}
         lo = self.pos
         hi = min(lo + self.rows_per_tick, self.rows_total)
-        live = {n: np.asarray(getattr(state, n)) for n in layout.CSUM_PLANES}
         repaired = 0
         if lo < self.bt_rows:
             repaired += self._scrub_group(
-                layout.BT_PLANES, lo, min(hi, self.bt_rows), live)
+                layout.BT_PLANES, lo, min(hi, self.bt_rows), state)
         if hi > self.bt_rows:
             repaired += self._scrub_group(
                 layout.NB_PLANES, max(lo - self.bt_rows, 0),
-                hi - self.bt_rows, live)
+                hi - self.bt_rows, state)
         self.scanned_rows += hi - lo
         self.repaired_rows += repaired
         self.pos = hi % self.rows_total

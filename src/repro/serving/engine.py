@@ -187,9 +187,11 @@ def snapshot_search(cfg, old_state, new_state, keys_hi, keys_lo,
     verify per-touched-bucket versions (``buckets_changed``) and retry
     changed queries on the new version. Returns (found, values, n_retried).
 
-    Both lookups go through ``engine.search_batch``'s default read path —
-    the segment-routed Pallas fingerprint kernel on eligible configs — so
-    the optimistic snapshot composition rides the fast path too; the
+    Both lookups go through ``engine.search_batch`` with the caller's
+    ``batching`` — ``"fused"`` for the single-dispatch small-batch path
+    (what the frontend selects under ``DashTable.fused_threshold``),
+    ``"auto"`` for the segment-routed Pallas kernel on eligible configs —
+    so the optimistic snapshot composition rides the fast path too; the
     version-plane verification reads bucket version words, not records.
     The serving frontend uses the lazy two-phase variant (retry dispatched
     only when the mask is non-empty) via ``buckets_changed`` directly."""

@@ -76,6 +76,26 @@ from .engine import buckets_changed
 
 READ, INSERT, UPDATE, DELETE, RMW = "read", "insert", "update", "delete", "rmw"
 
+
+def _read_batching(table: DashTable, max_batch: int,
+                   fused_reads: Optional[bool]) -> str:
+    """Read-path selection for a frontend tick. ``fused_reads=None`` picks
+    the fused single-dispatch probe exactly when the table's planner would
+    (batch fits under ``table.fused_threshold`` and the config is fused-
+    eligible); True/False force the fused or routed path — the forcing
+    knob the fused-on/off equivalence tests drive. The decision is made
+    once at construction: read batches are padded to ``max_batch``, so
+    every tick shares one shape and one plan."""
+    if fused_reads is False:
+        return "auto"
+    if fused_reads is True:
+        return "fused"
+    from repro.kernels import ops as kernel_ops
+    if (max_batch <= table.fused_threshold
+            and kernel_ops.fused_search_eligible(table.cfg)):
+        return "fused"
+    return "auto"
+
 #: frontend health states (PR 6). Guarantees:
 #:   HEALTHY  — every acknowledged write is durable (flush-on-publish ran
 #:              through its commit fence) and reads serve verified state.
@@ -292,11 +312,16 @@ class DashFrontend(FrontendBase):
 
     def __init__(self, table: DashTable, *, max_batch: int = 256,
                  queue_depth: int = 4096, readonly_on_full: bool = False,
-                 scrub_interval: int = 0, scrub_rows: int = 512):
+                 scrub_interval: int = 0, scrub_rows: int = 512,
+                 fused_reads: Optional[bool] = None):
         super().__init__(max_batch=max_batch, queue_depth=queue_depth)
         self.table = table
         self.cfg = table.cfg
         self.mode = table.mode
+        # read-path selection (fused single-dispatch probe vs routed
+        # auto path); writes already take the fused path through the
+        # table planner (DashTable._write_plan)
+        self.read_batching = _read_batching(table, max_batch, fused_reads)
         # capacity exhaustion policy: False preserves the raise-through
         # behavior; True turns it into the READONLY health state (reads
         # keep serving, writes fail explicitly)
@@ -396,7 +421,8 @@ class DashFrontend(FrontendBase):
                 self._dirty = True
         with self.registry.acquire() as snap:
             found, vals = dash_engine.search_batch(
-                self.cfg, self.mode, snap.state, hi, lo, batching="auto")
+                self.cfg, self.mode, snap.state, hi, lo,
+                batching=self.read_batching)
             found, vals = np.asarray(found).copy(), np.asarray(vals).copy()
             n_changed = 0
             if self._dirty:
@@ -413,7 +439,7 @@ class DashFrontend(FrontendBase):
                 # in-flight writes/SMOs
                 f2, v2 = dash_engine.search_batch(
                     self.cfg, self.mode, self.table.state, hi, lo,
-                    batching="auto")
+                    batching=self.read_batching)
                 found[changed] = np.asarray(f2)[changed]
                 vals[changed] = np.asarray(v2)[changed]
         self._finish_reads(ops, found, vals, n_changed)
@@ -541,12 +567,14 @@ class StopTheWorldFrontend(FrontendBase):
     whole storm; its sojourn latency shows it."""
 
     def __init__(self, table: DashTable, *, max_batch: int = 256,
-                 queue_depth: int = 4096):
+                 queue_depth: int = 4096,
+                 fused_reads: Optional[bool] = None):
         super().__init__(max_batch=max_batch, queue_depth=queue_depth)
         self.table = table
         self.cfg = table.cfg
         self.mode = table.mode
         self.queue = self.writes          # the single FIFO, reads included
+        self.read_batching = _read_batching(table, max_batch, fused_reads)
 
     def submit(self, op: Op) -> bool:
         return self.queue.offer(op)
@@ -557,7 +585,8 @@ class StopTheWorldFrontend(FrontendBase):
             self.table._ensure_recovered(self.table._segments_of(
                 np.asarray(hi)[:len(ops)], np.asarray(lo)[:len(ops)]))
         found, vals = dash_engine.search_batch(
-            self.cfg, self.mode, self.table.state, hi, lo, batching="auto")
+            self.cfg, self.mode, self.table.state, hi, lo,
+            batching=self.read_batching)
         self._finish_reads(ops, np.asarray(found), np.asarray(vals), 0)
 
     def _pump_write(self) -> bool:

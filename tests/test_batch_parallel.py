@@ -112,11 +112,11 @@ def test_table_end_to_end_equivalence(rng):
     vals = np.arange(3000, dtype=np.uint32)
 
     t_scan, t_seg = DashEH(cfg), DashEH(cfg)
-    t_scan._write_plan = lambda seg, n: ("scan", None)
+    t_scan._write_plan = lambda seg, n, fused_ok=True: ("scan", None)
     seg_plan = type(t_seg)._write_plan
 
-    def forced_segment(seg, n, _self=t_seg):
-        _, cap = seg_plan(_self, seg, n)
+    def forced_segment(seg, n, fused_ok=True, _self=t_seg):
+        _, cap = seg_plan(_self, seg, n, fused_ok=False)
         return "segment", cap or _self._lane_quantum(_self._max_per_segment(seg))
     t_seg._write_plan = forced_segment
 

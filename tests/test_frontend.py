@@ -162,6 +162,41 @@ def test_frontend_matches_stop_the_world(rng):
     assert f.all()
 
 
+def test_frontend_ticks_identical_fused_on_off(rng):
+    """Tick-for-tick equivalence of the fused read path: the same op
+    stream through a fused-reads frontend and a routed-reads frontend
+    produces identical per-op outcomes (found/value/status) AND the same
+    final table — writes ride the planner's fused path in both, so this
+    pins the serving-layer read selection specifically. The mixed stream
+    drives splits mid-stream, so snapshot + verify-retry reads cross SMO
+    boundaries under both paths."""
+    import copy
+    _, ops = _mixed_stream(np.random.default_rng(23))
+    ops_on, ops_off = copy.deepcopy(ops), copy.deepcopy(ops)
+
+    t_on = DashEH(CFG)
+    fe_on = DashFrontend(t_on, max_batch=128, queue_depth=1 << 14,
+                         fused_reads=True)
+    t_off = DashEH(CFG)
+    fe_off = DashFrontend(t_off, max_batch=128, queue_depth=1 << 14,
+                          fused_reads=False)
+    assert fe_on.read_batching == "fused"
+    assert fe_off.read_batching == "auto"
+    # interleave tick-for-tick so the two frontends see identical schedules
+    for op_a, op_b in zip(ops_on, ops_off):
+        assert fe_on.submit(op_a)
+        assert fe_off.submit(op_b)
+    while fe_on.step() | fe_off.step():
+        pass
+    for a, b in zip(ops_on, ops_off):
+        assert (a.kind, a.key, a.status, a.found, a.result) == \
+               (b.kind, b.key, b.status, b.found, b.result)
+    from tests.test_fused import _diverged
+    assert not _diverged(t_on.state, t_off.state)
+    assert fe_on.snapshot_reads == fe_off.snapshot_reads
+    assert fe_on.retried_reads == fe_off.retried_reads
+
+
 def test_frontend_rmw_and_delete(rng):
     t = DashEH(CFG)
     fe = DashFrontend(t, max_batch=64, queue_depth=4096)

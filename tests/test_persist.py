@@ -122,6 +122,10 @@ def test_pointer_mode_flush_is_o_dirty_plus_heap_tail(tmp_path):
     assert wb.last_heap_tail_rows == 48
     assert delta < wb.pool.plane_bytes // 4, \
         f"pointer-mode flush not incremental: {delta} bytes"
+    # the heap is device-sliced at its tail: host staging stays O(dirty
+    # rows + heap tail) too, never a whole-heap/whole-pool copy
+    assert wb.last_staged_bytes < wb.pool.plane_bytes // 4, \
+        f"pointer-mode flush staged {wb.last_staged_bytes} host bytes"
     t.close()
     t2, info = persist.reopen(p)
     f, v = t2.search(words=words_of(1, 649))
@@ -167,6 +171,18 @@ def test_flush_is_o_dirty(tmp_path, rng):
     assert b == t.writeback.last_flush_bytes
     assert t.writeback.last_dirty_rows <= 64 + cfg.num_stash * t.n_segments
     assert b < 0.05 * pool_bytes
+    # host staging is O(dirty) like the pool I/O: bytes materialized from
+    # device ≈ bytes flushed, plus the always-copied narrow planes (4-byte
+    # publish words + routing + scalars) and the pow2 gather padding —
+    # never a whole-pool copy
+    from repro.persist.writeback import GATHER_BT, GATHER_NB
+    wide = set(GATHER_BT + GATHER_NB)
+    narrow = sum(t.writeback.pool.spec(n).nbytes
+                 for n in layout.DashState._fields if n not in wide)
+    staged = t.writeback.last_staged_bytes
+    assert staged <= narrow + 4 * b, \
+        f"flush staged {staged} host bytes for {b} flushed (narrow={narrow})"
+    assert staged < 0.25 * pool_bytes
     # a small insert batch (may split) still flushes O(dirty), not O(pool)
     t.insert(keys[1000:1064], _vals(64))
     b1 = t.flush()
