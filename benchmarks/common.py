@@ -159,3 +159,34 @@ def ops_row(name: str, seconds: float, n_ops: int, extra: str = "") -> Row:
     if extra:
         derived += f"; {extra}"
     return Row(name, us, derived)
+
+
+# ---------------------------------------------------------------------------
+# observability hooks (obs/): every bench artifact carries histogram rows;
+# `run.py --trace` (or REPRO_TRACE=1) additionally captures op-lifecycle
+# spans and drops a TRACE_<bench>.json next to the artifact
+# ---------------------------------------------------------------------------
+
+def trace_enabled() -> bool:
+    from repro.obs import trace_enabled_from_env
+    return trace_enabled_from_env()
+
+
+def histogram_rows(obs, prefix: str = "") -> dict:
+    """The registry's histogram snapshots (n/p50/p90/p99/max per name) in
+    artifact shape — stamp under a ``"histograms"`` key."""
+    return obs.registry.histogram_rows(prefix)
+
+
+def export_trace(obs, name: str) -> Optional[str]:
+    """Write the tracer ring as ``TRACE_<name>.json`` next to the bench
+    artifacts when tracing is on; returns the path (None when disabled or
+    nothing was recorded)."""
+    tracer = obs.tracer
+    if not tracer.enabled or tracer.recorded == 0:
+        return None
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                        f"TRACE_{name}.json")
+    path = os.path.abspath(path)
+    tracer.export_chrome_trace(path)
+    return path

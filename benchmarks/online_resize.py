@@ -33,7 +33,8 @@ from repro.core import DashConfig, DashEH, layout
 from repro.serving.frontend import (INSERT, READ, DashFrontend, Op,
                                     StopTheWorldFrontend)
 from repro.workloads import ycsb
-from .common import Row, enable_compilation_cache, write_artifact
+from .common import (Row, enable_compilation_cache, export_trace,
+                     histogram_rows, write_artifact)
 
 ARTIFACT = "BENCH_online_resize.json"
 
@@ -136,6 +137,31 @@ def run():
             stats["whole_copy_bytes_per_batch"] = whole
             stats["publish_volume_ratio"] = (
                 fes["publish_bytes"] / (pub * whole))
+            # obs histogram rows (ISSUE-8): the registry's log-bucketed
+            # sojourn histograms must agree with the exact-sample
+            # percentiles above within 10% — the bucket geometry bounds
+            # the error at ±2.2%, so a miss means the frontend stopped
+            # feeding the histogram the same samples it keeps in
+            # read_latencies
+            h = fe.obs.registry.get("frontend.read_sojourn_s").snapshot()
+            stats["read_sojourn_hist"] = {
+                "n": h["n"], "p50_us": h["p50"] * 1e6,
+                "p90_us": h["p90"] * 1e6, "p99_us": h["p99"] * 1e6,
+                "max_us": h["max"] * 1e6}
+            assert h["n"] == stats["n"], (h["n"], stats["n"])
+            for q in ("p50", "p99"):
+                exact = stats[f"{q}_us"]
+                approx = h[q] * 1e6
+                err = abs(approx - exact) / exact
+                assert err <= 0.10, \
+                    f"hist {q} {approx:.1f}us vs exact {exact:.1f}us " \
+                    f"({err:.1%} > 10%)"
+            report["histograms"] = histogram_rows(fe.obs, "frontend.")
+            report["slo"] = fe.obs.slo.snapshot()
+            tp = export_trace(fe.obs, "online_resize")
+            if tp:
+                stats["trace_path"] = tp
+                stats["trace"] = fe.obs.tracer.stats()
         report[tag] = stats
         tables[tag] = t
         rows.append(Row(f"online_resize/{tag}_read", stats["p50_us"],

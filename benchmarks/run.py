@@ -93,7 +93,12 @@ def main() -> None:
                     help="re-run benches even when their JSON artifact is fresh")
     ap.add_argument("--list", action="store_true",
                     help="list tags, modules and artifact freshness; run nothing")
+    ap.add_argument("--trace", action="store_true",
+                    help="capture op-lifecycle spans (obs/trace.py) in benches "
+                         "that drive a frontend; writes TRACE_<bench>.json")
     args = ap.parse_args()
+    if args.trace:
+        os.environ["REPRO_TRACE"] = "1"
     only = set(args.only.split(",")) if args.only else None
 
     if args.list:

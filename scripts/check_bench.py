@@ -1,0 +1,176 @@
+#!/usr/bin/env python
+"""Bench-regression gate: check ``BENCH_*.json`` artifacts against their
+acceptance bounds and against the last committed run.
+
+Two checks, one per invocation mode:
+
+``--self``
+    Every artifact in the working tree satisfies its ABSOLUTE acceptance
+    bounds — the same gates the bench modules assert before writing the
+    JSON, re-checked from the artifact so CI catches a hand-edited or
+    stale-schema file without re-running a 4-minute bench.
+
+default (regression)
+    Working-tree artifacts vs the committed baseline (``git show
+    REF:artifact``): headline fields may not be WORSE than the baseline by
+    more than a tolerance. Tolerances are wide (1-core container, noisy
+    wall clocks) — this catches step-function regressions (a gate ratio
+    doubling), not percent-level noise. Ratio-of-ratio fields use
+    multiplicative tolerance; counts must match exactly.
+
+Exit status 0 = all checks pass; 1 = violation (each printed); missing
+artifacts or a missing baseline are SKIPPED with a note (first run of a
+new bench has no baseline to regress against).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import math
+import os
+import subprocess
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# -- absolute acceptance bounds (mirror of each bench's asserts) -------------
+# (artifact, dotted field, op, bound); op: "<=", ">=", "=="
+GATES = [
+    ("BENCH_online_resize.json", "p99_ratio", "<=", 0.5),
+    ("BENCH_online_resize.json", "frontend.publish_volume_ratio", "<=", 0.25),
+    ("BENCH_online_resize.json", "frontend.hint_misses", "==", 0),
+    ("BENCH_online_resize.json", "frontend.read_sojourn_hist.n", ">=", 1),
+    ("BENCH_batch_parallel.json", "latency_256.insert_fused_vs_scan_p50",
+     ">=", 1.5),
+    ("BENCH_batch_parallel.json", "latency_256.search_fused_vs_vmap_p50",
+     ">=", 1.0),
+    ("BENCH_durable_restart.json", "ttfq_spread", "<=", 2.0),
+    ("BENCH_durable_restart.json", "storm.volume_ratio", "<=", 0.25),
+    ("BENCH_durable_restart.json", "storm.staged_ratio", "<=", 0.25),
+    ("BENCH_durable_restart.json", "storm.flush_hint_misses", "==", 0),
+    ("BENCH_durable_restart.json", "checksummed_reopen.ratio", "<=", 1.5),
+    ("BENCH_chaos.json", "matrix.wrong_reads", "==", 0),
+    ("BENCH_chaos.json", "matrix.silent_lost", "==", 0),
+    ("BENCH_chaos.json", "matrix.indeterminate_pending", "==", 0),
+]
+
+# -- regression tolerances vs the committed baseline -------------------------
+# (artifact, dotted field, direction, rel_tol): "lower" = smaller is better,
+# value may grow to baseline*(1+tol); "higher" = larger is better, value may
+# shrink to baseline*(1-tol).
+REGRESSION = [
+    ("BENCH_online_resize.json", "p99_ratio", "lower", 1.0),
+    ("BENCH_online_resize.json", "frontend.publish_volume_ratio",
+     "lower", 0.5),
+    ("BENCH_online_resize.json", "throughput_ratio", "higher", 0.5),
+    ("BENCH_batch_parallel.json", "latency_256.insert_fused_vs_scan_p50",
+     "higher", 0.5),
+    ("BENCH_batch_parallel.json", "latency_256.search_fused_vs_vmap_p50",
+     "higher", 0.33),
+    ("BENCH_durable_restart.json", "storm.volume_ratio", "lower", 0.5),
+    ("BENCH_durable_restart.json", "ttfq_spread", "lower", 0.5),
+    ("BENCH_chaos.json", "scrub.bound_ticks", "lower", 0.5),
+]
+
+
+def _dig(doc: dict, path: str):
+    v = doc
+    for part in path.split("."):
+        if not isinstance(v, dict) or part not in v:
+            return None
+        v = v[part]
+    return v if isinstance(v, (int, float)) and not isinstance(v, bool) \
+        else None
+
+
+def _load_tree(artifact: str):
+    p = os.path.join(ROOT, artifact)
+    if not os.path.exists(p):
+        return None
+    with open(p) as f:
+        return json.load(f)
+
+
+def _load_ref(artifact: str, ref: str):
+    r = subprocess.run(["git", "show", f"{ref}:{artifact}"], cwd=ROOT,
+                       capture_output=True, text=True)
+    if r.returncode != 0:
+        return None
+    try:
+        return json.loads(r.stdout)
+    except json.JSONDecodeError:
+        return None
+
+
+def check_gates(docs: dict) -> list:
+    fails = []
+    for artifact, field, op, bound in GATES:
+        doc = docs.get(artifact)
+        if doc is None:
+            continue
+        v = _dig(doc, field)
+        if v is None or (isinstance(v, float) and math.isnan(v)):
+            fails.append(f"{artifact}:{field} missing from artifact")
+            continue
+        ok = {"<=": v <= bound, ">=": v >= bound, "==": v == bound}[op]
+        if not ok:
+            fails.append(f"{artifact}:{field} = {v:g} violates {op} {bound:g}")
+    return fails
+
+
+def check_regression(docs: dict, ref: str) -> list:
+    fails = []
+    for artifact, field, direction, tol in REGRESSION:
+        doc = docs.get(artifact)
+        if doc is None:
+            continue
+        base_doc = _load_ref(artifact, ref)
+        if base_doc is None:
+            print(f"# {artifact}: no baseline at {ref}, skipping regression")
+            continue
+        v, b = _dig(doc, field), _dig(base_doc, field)
+        if v is None or b is None:
+            continue            # field new in this PR: nothing to regress
+        if direction == "lower" and v > b * (1 + tol):
+            fails.append(f"{artifact}:{field} = {v:g} regressed vs "
+                         f"baseline {b:g} (> +{tol:.0%})")
+        elif direction == "higher" and v < b * (1 - tol):
+            fails.append(f"{artifact}:{field} = {v:g} regressed vs "
+                         f"baseline {b:g} (< -{tol:.0%})")
+    return fails
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--self", action="store_true", dest="self_only",
+                    help="absolute gate bounds only (no git baseline)")
+    ap.add_argument("--ref", default="HEAD",
+                    help="git ref for the regression baseline (default HEAD)")
+    args = ap.parse_args()
+
+    artifacts = sorted({a for a, *_ in GATES} | {a for a, *_ in REGRESSION})
+    docs = {}
+    for a in artifacts:
+        doc = _load_tree(a)
+        if doc is None:
+            print(f"# {a}: not in working tree, skipping")
+        else:
+            docs[a] = doc
+    if not docs:
+        print("no artifacts found; nothing to check")
+        return 0
+
+    fails = check_gates(docs)
+    if not args.self_only:
+        fails += check_regression(docs, args.ref)
+    for f in fails:
+        print(f"FAIL {f}")
+    n_gates = sum(1 for a, *_ in GATES if a in docs)
+    print(f"checked {len(docs)} artifacts, {n_gates} gates"
+          + ("" if args.self_only else f", baseline {args.ref}")
+          + f": {'FAIL' if fails else 'OK'}")
+    return 1 if fails else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -15,6 +15,13 @@
 #   6. fused smoke             (batch-256 insert+search through the fused
 #                               single-dispatch path, bit-identical to the
 #                               scan/vmap references)
+#   7. obs smoke               (REPRO_TRACE=1 frontend workload: valid
+#                               Chrome-trace JSON, every ack span linked to
+#                               its batch/publish/flush, SLO snapshot
+#                               populated)
+#   8. bench gates             (scripts/check_bench.py --self: committed
+#                               BENCH_*.json artifacts still satisfy their
+#                               acceptance bounds)
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
@@ -110,5 +117,45 @@ assert (np.asarray(f1) == np.asarray(f2)).all()
 assert (np.asarray(v1) == np.asarray(v2)).all()
 print("fused smoke OK: 512 inserts + 256 searches bit-identical")
 PY
+
+echo "== obs smoke (trace capture -> ack linkage + SLO snapshot) =="
+REPRO_TRACE=1 python - "$SMOKE_DIR/obs.pool" <<'PY'
+import json, sys
+import numpy as np
+from repro import persist
+from repro.persist.chaos import CHAOS_CFG
+from repro.serving.frontend import INSERT, READ, DashFrontend, Op
+t = persist.create(sys.argv[1], CHAOS_CFG)
+f = DashFrontend(t)
+assert f.obs.tracer.enabled, "REPRO_TRACE=1 must enable span capture"
+keys = np.unique(np.random.default_rng(0x0B5).integers(1, 2**63, 2000,
+                                                       np.uint64))[:700]
+for k in keys:
+    f.submit(Op(INSERT, int(k), int(k & 0x7FFFFFFF)))
+for k in keys[:128]:
+    f.submit(Op(READ, int(k)))
+f.drain()
+doc = f.obs.tracer.export_chrome_trace(sys.argv[1] + ".trace.json")
+json.load(open(sys.argv[1] + ".trace.json"))     # valid JSON on disk
+evs = [e for e in doc["traceEvents"] if e["ph"] in ("X", "i")]
+by_sid = {e["args"]["sid"]: e for e in evs}
+acks = [e for e in evs if e["name"] == "ack"]
+assert acks, "no ack spans recorded"
+for a in acks:
+    names = {by_sid[l]["name"] for l in a["args"].get("links", [])
+             if l in by_sid}
+    want = ({"write_batch", "publish", "flush"}
+            if a["args"].get("kind") == INSERT else {"read_batch"})
+    assert want <= names, (a["args"], names)
+snap = f.obs_snapshot()
+assert snap["slo"]["tick"] > 0 and "read_sojourn" in snap["slo"]
+assert snap["metrics"]["frontend.write_sojourn_s"]["n"] == len(keys)
+n_flush = sum(1 for e in evs if e["name"] == "flush")
+print(f"obs smoke OK: {len(acks)} acks linked, {n_flush} flush spans, "
+      f"slo ticks={snap['slo']['tick']}")
+PY
+
+echo "== bench gates (committed artifacts satisfy acceptance bounds) =="
+python scripts/check_bench.py --self
 
 echo "CI OK"

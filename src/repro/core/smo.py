@@ -340,6 +340,12 @@ class BulkSplitTask:
         self.n_committed = K
         self._ok = None
         self.stage = "phase1"
+        self.kind = "eh_bulk_split"
+
+    def describe(self) -> dict:
+        """Span/trace args: what this SMO is doing, sized."""
+        return {"kind": self.kind, "segments": int(self.old_np.size),
+                "shortfall": int(self.shortfall)}
 
     @property
     def touched(self) -> np.ndarray:
@@ -387,11 +393,16 @@ class BulkSplitNextTask:
         self._ok = None
         self._old_phys = None
         self.stage = "dispatch"
+        self.kind = "lh_split_next"
         #: dirty-plane footprint (split sources at Next.. + the new physical
         #: ids at the watermark); the planner (DashLH.make_smo_task) fills
         #: it from the host-visible lh_dir/watermark
         self.touched = np.zeros(0, np.int32) if touched is None \
             else np.asarray(touched, np.int32).reshape(-1)
+
+    def describe(self) -> dict:
+        """Span/trace args: what this SMO is doing, sized."""
+        return {"kind": self.kind, "stride": int(self.R)}
 
     def pump(self, state: DashState):
         from . import dash_lh

@@ -136,6 +136,7 @@ class DashTable:
         self.dirty = DirtyTracker()   # dirty planes since the last publish
         self.writeback = None         # durable PM-pool engine (persist/)
         self.lost_report: list = []   # quarantined rows from a verified reopen
+        self.obs = None               # observability bundle (obs/), optional
 
     # -- key plumbing --------------------------------------------------------
 
@@ -247,6 +248,11 @@ class DashTable:
                 self.state = recovery.recover_segment_host(
                     self.cfg, self.mode, self.state, int(seg))
                 self.recovered_segments += 1
+                if self.obs is not None:
+                    self.obs.registry.counter(
+                        "table.lazy_recoveries").inc()
+                    self.obs.tracer.instant("lazy_recovery", "recovery",
+                                            segment=int(seg))
 
     # -- public ops -----------------------------------------------------------
 
@@ -360,6 +366,16 @@ class DashTable:
         ``flush()`` (and the serving frontend's publish) then mirror every
         acknowledged batch into the pool in O(dirty) bytes."""
         self.writeback = wb
+        if self.obs is not None:
+            wb.attach_obs(self.obs)
+
+    def attach_obs(self, obs):
+        """Bind an observability bundle (obs/): the table counts lazy
+        recoveries and staged SMOs into its registry and propagates the
+        bundle to an attached writeback (flush spans, scrub counters)."""
+        self.obs = obs
+        if self.writeback is not None:
+            self.writeback.attach_obs(obs)
 
     def flush(self) -> int:
         """Make the live state durable: drain the dirty tracker and write
@@ -444,6 +460,10 @@ class DashTable:
         frontend) invoke this once per task."""
         self.dirty.note_segments(task.touched)
         self.dirty.note_dir()
+        if self.obs is not None:
+            self.obs.registry.counter("table.smo_tasks").inc()
+            self.obs.registry.counter("table.smo_segments").inc(
+                int(np.asarray(task.touched).size))
 
 
 class DashEH(DashTable):

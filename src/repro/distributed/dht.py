@@ -353,10 +353,16 @@ class ShardFrontend(frontend.FrontendBase):
     """
 
     def __init__(self, dht: DistributedDash, *, max_batch: int = 256,
-                 queue_depth: int = 4096):
-        super().__init__(max_batch=max_batch, queue_depth=queue_depth)
+                 queue_depth: int = 4096, obs=None):
+        super().__init__(max_batch=max_batch, queue_depth=queue_depth,
+                         obs=obs)
         self.dht = dht
         self._dirty = True
+        # per-shard degraded transitions (satellite of the quarantine/
+        # transition surfacing): counts every shard that ENTERS degraded,
+        # not just the frontend-level health flip
+        self.shard_degraded_transitions = 0
+        self._degraded_prev: set = set()
         self._publish()
         self._pending = None          # in-flight insert batch host state
         self._split_keys = None       # keys whose owners need a bulk split
@@ -369,16 +375,33 @@ class ShardFrontend(frontend.FrontendBase):
         segments (plus each shard's directory when it changed). With pools
         attached, every publish also flushes each shard into its own pool
         (flush-on-publish: acknowledged DHT ops are durable)."""
-        self.registry.publish_cow(self.dht.cfg, self.dht.state)
-        if self.dht.writebacks is not None:
-            self.dht.flush_pools()
-            if self.dht.degraded_shards():
-                if self.health == frontend.HEALTHY:
-                    self.health = frontend.DEGRADED
-                    self.degraded_events += 1
-                self.unflushed_publishes += 1
-            elif self.health == frontend.DEGRADED:
-                self.health = frontend.HEALTHY
+        tr = self.obs.tracer
+        with tr.span("publish", "epoch") as psp:
+            self.registry.publish_cow(self.dht.cfg, self.dht.state)
+            self._publishes.inc()
+            self._publish_bytes.inc(self.registry.last_publish_bytes)
+            if self.dht.writebacks is not None:
+                for wb in self.dht.writebacks:
+                    if wb.obs is None:
+                        # per-shard flush spans nest under this publish
+                        wb.attach_obs(self.obs)
+                before = sum(w.flushed_bytes for w in self.dht.writebacks)
+                self.dht.flush_pools()
+                self._flush_bytes.inc(
+                    sum(w.flushed_bytes for w in self.dht.writebacks)
+                    - before)
+                degraded = set(self.dht.degraded_shards())
+                self.shard_degraded_transitions += len(
+                    degraded - self._degraded_prev)
+                self._degraded_prev = degraded
+                if degraded:
+                    if self.health == frontend.HEALTHY:
+                        self._set_health(frontend.DEGRADED)
+                    self.unflushed_publishes += 1
+                elif self.health == frontend.DEGRADED:
+                    self._set_health(frontend.HEALTHY)
+            if psp is not None:
+                psp.args["bytes"] = self.registry.last_publish_bytes
         self._dirty = False
 
     def submit(self, op) -> bool:
@@ -391,6 +414,7 @@ class ShardFrontend(frontend.FrontendBase):
 
     def stats(self) -> dict:
         out = super().stats()
+        out["shard_degraded_transitions"] = self.shard_degraded_transitions
         if self.dht.writebacks is not None:
             out["flushes"] = sum(w.flushes for w in self.dht.writebacks)
             out["flushed_bytes"] = sum(w.flushed_bytes
@@ -405,6 +429,36 @@ class ShardFrontend(frontend.FrontendBase):
                                          for w in self.dht.writebacks)
             out["degraded_flushes"] = sum(w.degraded_flushes
                                           for w in self.dht.writebacks)
+            # durable quarantine evidence, fleet-wide (satellite: chaos
+            # runs assert on the aggregate without reaching into pools)
+            out["lost_records"] = sum(w.pool.sb.lost_records
+                                      for w in self.dht.writebacks)
+            out["quarantined_bt"] = sum(len(w.pool.sb.lost_bt)
+                                        for w in self.dht.writebacks)
+            out["quarantined_nb"] = sum(len(w.pool.sb.lost_nb)
+                                        for w in self.dht.writebacks)
+        return out
+
+    def shard_registries(self) -> list:
+        """One mirror ``Registry`` per shard (the writeback's cumulative
+        counters ingested as Counters), so ``Registry.aggregate`` sums a
+        fleet view — the per-shard observability surface."""
+        from repro.obs import Registry
+        regs = []
+        for wb in (self.dht.writebacks or []):
+            r = Registry()
+            r.ingest(wb.stats(), prefix="wb.", counters=True)
+            regs.append(r)
+        return regs
+
+    def obs_snapshot(self) -> dict:
+        from repro.obs import Registry
+        self.obs.registry.ingest(self.stats(), prefix="stats.")
+        out = self.obs.snapshot()
+        regs = self.shard_registries()
+        if regs:
+            out["shards"] = Registry.aggregate(regs).snapshot()
+            out["per_shard"] = [r.snapshot() for r in regs]
         return out
 
     def try_recover(self) -> bool:
@@ -417,7 +471,8 @@ class ShardFrontend(frontend.FrontendBase):
             self.dht.recover_pools()
         ok = not self.dht.degraded_shards()
         if ok:
-            self.health = frontend.HEALTHY
+            self._degraded_prev = set()
+            self._set_health(frontend.HEALTHY)
         return ok
 
     def _write_pending(self) -> bool:

@@ -147,6 +147,7 @@ class PmPool:
     def __init__(self, path: str, sb: Superblock, faults=None):
         self.path = path
         self.sb = sb
+        self.obs = None               # observability bundle, set via writeback
         self.cfg = DashConfig(**sb.cfg)
         self.mode = sb.mode
         self.specs, self.log, self.csum, self.total_bytes = \
@@ -518,6 +519,13 @@ class PmPool:
                     log_nb=sb.log_nb, log_routing=sb.log_routing,
                     log_crc=sb.log_crc)
         self.fence()
+        if self.obs is not None:
+            self.obs.registry.counter("pool.quarantine_events").inc()
+            self.obs.registry.counter("pool.quarantined_rows").inc(
+                len(report))
+            self.obs.tracer.instant(
+                "quarantine", "persist", rows=len(report),
+                lost_records=sum(r.get("lost_records", 0) for r in report))
 
     def lost_entries(self) -> list:
         """The durable lost-keys report, decoded to quarantine-report shape

@@ -210,6 +210,15 @@ class WritebackEngine:
         self.degraded = False
         self._ops_budget: Optional[int] = None
         self.dead = False
+        self.obs = None               # observability bundle (obs/), optional
+        self.last_flush_sid = None    # span id of the last committed flush
+
+    def attach_obs(self, obs):
+        """Bind an observability bundle: each flush becomes a traced span
+        (with redo-log commit / log-apply instants) and quarantine events
+        surface through the pool."""
+        self.obs = obs
+        self.pool.obs = obs
 
     # -- crash injection ---------------------------------------------------
 
@@ -338,6 +347,16 @@ class WritebackEngine:
             self.degraded_flushes += 1
             raise WritebackDegraded(
                 f"pool {self.pool.path} is degraded; call try_recover first")
+        tr = self.obs.tracer if self.obs is not None else None
+        fsp = tr.begin("flush", "persist") if tr is not None else None
+        try:
+            return self._flush_inner(state, hint, tr, fsp)
+        except WritebackDegraded:
+            if tr is not None:
+                tr.end(fsp, degraded=True)
+            raise
+
+    def _flush_inner(self, state: DashState, hint, tr, fsp) -> int:
         t0 = time.perf_counter()
         self.last_flush_bytes = 0
         self.last_flush_rows = 0
@@ -487,6 +506,9 @@ class WritebackEngine:
                          log_bt=log_bt, log_nb=log_nb,
                          log_routing=log_routing, log_crc=log_crc)
         self._fence()
+        if tr is not None:
+            tr.instant("redo_log_commit", "persist", parent=fsp,
+                       logged=log_routing, log_rows=log_bt)
 
         # phase 7: apply the committed log to the home rows (idempotent —
         # a crash inside the apply is redone at the next open)
@@ -503,9 +525,16 @@ class WritebackEngine:
             self.pool.commit(gver=int(live["gver"]),
                              clean=bool(live["clean"]))
             self._fence()
+            if tr is not None:
+                tr.instant("log_apply", "persist", parent=fsp)
 
         self.flushes += 1
         self.flush_seconds += time.perf_counter() - t0
+        if tr is not None:
+            tr.end(fsp, bytes=self.last_flush_bytes,
+                   rows=self.last_flush_rows,
+                   dirty_rows=self.last_dirty_rows)
+            self.last_flush_sid = fsp.sid if fsp is not None else None
         return self.last_flush_bytes
 
     def stats(self) -> dict:
@@ -596,6 +625,13 @@ class Scrubber:
         self.pos = hi % self.rows_total
         if self.pos == 0:
             self.cycles += 1
+        obs = self.wb.obs
+        if obs is not None:
+            obs.registry.counter("scrub.scanned_rows").inc(hi - lo)
+            if repaired:
+                obs.registry.counter("scrub.repaired_rows").inc(repaired)
+                obs.tracer.instant("scrub_repair", "persist",
+                                   rows=repaired, window=(lo, hi))
         if repaired:
             try:
                 self.wb.pool.fence()

@@ -59,13 +59,13 @@ path (single FIFO, full split storms inside write batches) — the baseline
 from __future__ import annotations
 
 import dataclasses
-import time
 from collections import deque
 from typing import List, Optional
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro import obs as obs_mod
 from repro.core import engine as dash_engine
 from repro.core import hashing
 from repro.core.epoch import SnapshotRegistry
@@ -145,7 +145,7 @@ class AdmissionQueue:
         if len(self._q) >= self.depth:
             self.rejected += 1
             return False
-        op.enqueue_t = time.perf_counter()
+        op.enqueue_t = obs_mod.now()
         self._q.append(op)
         self.admitted += 1
         return True
@@ -196,18 +196,50 @@ class FrontendBase:
     ``_pump_write``) and report in-flight write work via
     ``_write_pending``."""
 
-    def __init__(self, *, max_batch: int = 256, queue_depth: int = 4096):
+    def __init__(self, *, max_batch: int = 256, queue_depth: int = 4096,
+                 obs: Optional[obs_mod.Observability] = None):
         self.reads = AdmissionQueue(queue_depth)
         self.writes = AdmissionQueue(queue_depth)
         self.former = BatchFormer(max_batch)
         self.registry = SnapshotRegistry()
         self.health = HEALTHY
         self.degraded_events = 0     # HEALTHY -> DEGRADED transitions
+        self.readonly_events = 0     # -> READONLY transitions (terminal)
         self.unflushed_publishes = 0  # publishes acked volatile while degraded
         self.snapshot_reads = 0      # queries answered from the snapshot
         self.retried_reads = 0       # queries re-run on the live version
         self.read_latencies: List[float] = []
         self.write_latencies: List[float] = []
+        # observability bundle: metrics registry + tracer + SLO monitor
+        # (obs/). The sojourn histograms are fed by the same _finish_*
+        # stamps the latency lists come from — one clock, one code path.
+        self.obs = obs if obs is not None else obs_mod.Observability()
+        scope = self.obs.registry.scope("frontend")
+        self._read_hist = scope.histogram("read_sojourn_s")
+        self._write_hist = scope.histogram("write_sojourn_s")
+        self._publish_bytes = scope.counter("publish_bytes")
+        self._flush_bytes = scope.counter("flush_bytes")
+        self._publishes = scope.counter("publishes")
+        self.obs.slo.watch_histogram("read_sojourn", self._read_hist)
+        self.obs.slo.watch_histogram("write_sojourn", self._write_hist)
+        self.obs.slo.watch_rate("publish_bytes_per_s", self._publish_bytes)
+        self.obs.slo.watch_rate("flush_bytes_per_s", self._flush_bytes)
+        self.obs.slo.note_health(self.health)
+
+    def _set_health(self, new: str):
+        """The one health-transition path: keeps the transition counters
+        the fault tests assert on, the SLO monitor's dwell accounting, and
+        the trace instant in sync."""
+        if new == self.health:
+            return
+        if new == DEGRADED:
+            self.degraded_events += 1
+        elif new == READONLY:
+            self.readonly_events += 1
+        self.obs.tracer.instant("health_transition", "health",
+                                frm=self.health, to=new)
+        self.obs.slo.note_health(new)
+        self.health = new
 
     def submit(self, op: Op) -> bool:
         if self.health == READONLY and op.kind != READ:
@@ -234,6 +266,7 @@ class FrontendBase:
         out["retried_reads"] = self.retried_reads
         out["health"] = self.health
         out["degraded_events"] = self.degraded_events
+        out["readonly_events"] = self.readonly_events
         out["unflushed_publishes"] = self.unflushed_publishes
         table = getattr(self, "table", None)
         if table is not None:
@@ -244,33 +277,45 @@ class FrontendBase:
                                       for r in report)
         wb = getattr(table, "writeback", None)
         if wb is not None:
-            # superblock count is the durable cumulative truth (survives
-            # the healing flush and later restarts); prefer it when present
+            # superblock counts are the durable cumulative truth (survive
+            # the healing flush and later restarts); prefer them when present
             out["lost_records"] = max(out.get("lost_records", 0),
                                       wb.pool.sb.lost_records)
+            out["quarantined_bt"] = len(wb.pool.sb.lost_bt)
+            out["quarantined_nb"] = len(wb.pool.sb.lost_nb)
+            out["quarantine_overflow"] = wb.pool.sb.lost_overflow
             out.update(wb.stats())
         scrubber = getattr(self, "scrubber", None)
         if scrubber is not None:
             out.update(scrubber.stats())
         return out
 
+    def obs_snapshot(self) -> dict:
+        """Full observability export: registry metrics (with the stats()
+        surfaces mirrored in under ``stats.``), the last SLO snapshot, and
+        tracer occupancy."""
+        self.obs.registry.ingest(self.stats(), prefix="stats.")
+        return self.obs.snapshot()
+
     def _finish_reads(self, ops: List[Op], found, vals, n_changed: int):
-        now = time.perf_counter()
+        now = self.obs.now()
         for i, op in enumerate(ops):
             op.found = bool(found[i])
             op.result = int(vals[i])
             op.status = INSERTED if op.found else NOT_FOUND
             op.done_t = now
             self.read_latencies.append(op.latency)
+        self._read_hist.observe_many([op.latency for op in ops])
         self.snapshot_reads += len(ops) - n_changed
         self.retried_reads += n_changed
 
     def _finish_writes(self, ops: List[Op], statuses):
-        now = time.perf_counter()
+        now = self.obs.now()
         for op, st in zip(ops, statuses):
             op.status = int(st)
             op.done_t = now
             self.write_latencies.append(op.latency)
+        self._write_hist.observe_many([op.latency for op in ops])
 
     def step(self) -> bool:
         """One tick: a read batch first (latency priority — it never waits
@@ -313,9 +358,12 @@ class DashFrontend(FrontendBase):
     def __init__(self, table: DashTable, *, max_batch: int = 256,
                  queue_depth: int = 4096, readonly_on_full: bool = False,
                  scrub_interval: int = 0, scrub_rows: int = 512,
-                 fused_reads: Optional[bool] = None):
-        super().__init__(max_batch=max_batch, queue_depth=queue_depth)
+                 fused_reads: Optional[bool] = None,
+                 obs: Optional[obs_mod.Observability] = None):
+        super().__init__(max_batch=max_batch, queue_depth=queue_depth,
+                         obs=obs)
         self.table = table
+        table.attach_obs(self.obs)
         self.cfg = table.cfg
         self.mode = table.mode
         # read-path selection (fused single-dispatch probe vs routed
@@ -335,6 +383,12 @@ class DashFrontend(FrontendBase):
             from repro.persist.writeback import Scrubber
             self.scrubber = Scrubber(table.writeback, rows_per_tick=scrub_rows)
         self._dirty = True            # live state diverged from the snapshot
+        # trace state: the batch/SMO spans stay open across ticks; the last
+        # publish/flush span ids are what ack spans causally link back to
+        self._batch_span = None
+        self._smo_span = None
+        self._last_publish_sid = None
+        self._last_flush_sid = None
         self._publish()
         # in-flight write machinery (at most one of each at a time)
         self._insert_job = None
@@ -369,22 +423,36 @@ class DashFrontend(FrontendBase):
         committed image; acknowledgments stop implying durability until
         ``try_recover`` succeeds). The hint loss is harmless: recovery
         resynchronizes with a force-full flush."""
-        hint = self.table.dirty.drain()
-        self.registry.publish_cow(self.cfg, self.table.state,
-                                  dirty_hint=hint)
-        wb = self.table.writeback
-        if wb is not None:
-            if wb.degraded:
-                self.unflushed_publishes += 1
-            else:
-                from repro.persist.writeback import WritebackDegraded
-                try:
-                    wb.flush(self.table.state, hint)
-                except WritebackDegraded:
-                    if self.health == HEALTHY:
-                        self.health = DEGRADED
-                        self.degraded_events += 1
+        tr = self.obs.tracer
+        self._last_publish_sid = None
+        self._last_flush_sid = None
+        with tr.span("publish", "epoch") as psp:
+            hint = self.table.dirty.drain()
+            self.registry.publish_cow(self.cfg, self.table.state,
+                                      dirty_hint=hint)
+            self._publishes.inc()
+            self._publish_bytes.inc(self.registry.last_publish_bytes)
+            if psp is not None:
+                psp.args["bytes"] = self.registry.last_publish_bytes
+                self._last_publish_sid = psp.sid
+            wb = self.table.writeback
+            if wb is not None:
+                if wb.degraded:
                     self.unflushed_publishes += 1
+                else:
+                    from repro.persist.writeback import WritebackDegraded
+                    before = wb.flushed_bytes
+                    try:
+                        # the writeback opens its own "flush" span — nested
+                        # under this publish span via the tracer stack
+                        # (flush-on-publish, rendered literally)
+                        wb.flush(self.table.state, hint)
+                        self._last_flush_sid = wb.last_flush_sid
+                    except WritebackDegraded:
+                        if self.health == HEALTHY:
+                            self._set_health(DEGRADED)
+                        self.unflushed_publishes += 1
+                    self._flush_bytes.inc(wb.flushed_bytes - before)
         self._dirty = False
 
     def try_recover(self) -> bool:
@@ -396,16 +464,25 @@ class DashFrontend(FrontendBase):
             return False
         wb = self.table.writeback
         if wb is None or not wb.degraded:
-            self.health = HEALTHY
+            self._set_health(HEALTHY)
             return True
         if wb.try_recover(self.table.state):
-            self.health = HEALTHY
+            self._set_health(HEALTHY)
             return True
         return False
 
     # -- read lane ---------------------------------------------------------
 
     def _serve_reads(self, ops: List[Op]):
+        tr = self.obs.tracer
+        with tr.span("read_batch", "serving", n=len(ops)) as rsp:
+            n_changed = self._serve_reads_inner(ops)
+        ack = tr.begin("ack", "serving", kind=READ, n=len(ops),
+                       retried=n_changed)
+        tr.link(ack, rsp)
+        tr.end(ack)
+
+    def _serve_reads_inner(self, ops: List[Op]) -> int:
         hi, lo = _keys_arrays(ops, pad_to=self.former.max_batch)
         if self.table.lazy_recovery:
             # lazy per-segment recovery hooks the READ path too (Sec. 4.8):
@@ -443,6 +520,7 @@ class DashFrontend(FrontendBase):
                 found[changed] = np.asarray(f2)[changed]
                 vals[changed] = np.asarray(v2)[changed]
         self._finish_reads(ops, found, vals, n_changed)
+        return n_changed
 
     # -- write lane --------------------------------------------------------
 
@@ -457,30 +535,59 @@ class DashFrontend(FrontendBase):
         except TableFullError:
             if not self.readonly_on_full:
                 raise
-            self.health = READONLY
+            self._set_health(READONLY)
+            tr = self.obs.tracer
             if self._insert_ops:
                 self._finish_writes(self._insert_ops,
                                     [DROPPED] * len(self._insert_ops))
+            tr.end(self._batch_span, dropped=True)
+            tr.end(self._smo_span, dropped=True)
+            self._batch_span = self._smo_span = None
             self._insert_job, self._insert_ops = None, []
             self._smo_task = None
             while len(self.writes):
                 op = self.writes.pop()
                 op.status = DROPPED
-                op.done_t = time.perf_counter()
+                op.done_t = self.obs.now()
                 self.writes.rejected += 1
             self._dirty = True       # surgery may have run mid-SMO
             self._publish()
             return True
 
+    def _begin_smo_span(self):
+        task = self._smo_task
+        if task is not None:
+            self._smo_span = self.obs.tracer.begin("smo", "smo",
+                                                   **task.describe())
+
+    def _emit_write_ack(self, batch_span, kind: str, n: int):
+        """The acknowledgment trace event: an acked batch links back to its
+        batch span, the publish that made it visible, and (when durable)
+        the flush that made it durable — the causal chain the acceptance
+        gate verifies end-to-end."""
+        tr = self.obs.tracer
+        if not tr.enabled:
+            return
+        ack = tr.begin("ack", "serving", parent=batch_span, kind=kind, n=n)
+        tr.link(ack, batch_span, self._last_publish_sid,
+                self._last_flush_sid)
+        tr.end(ack)
+
     def _pump_write_inner(self) -> bool:
+        tr = self.obs.tracer
         if self._smo_task is not None:
-            self.table.state, done = self._smo_task.pump(self.table.state)
+            with tr.span("smo_stage", "smo", parent=self._smo_span,
+                         stage=self._smo_task.stage):
+                self.table.state, done = self._smo_task.pump(
+                    self.table.state)
             self.smo_stages += 1
             self._dirty = True
             if done:
                 shortfall = self._smo_task.shortfall
                 self._smo_task = None
                 self.smo_dispatches += 1
+                tr.end(self._smo_span, shortfall=shortfall)
+                self._smo_span = None
                 # the next directory version is live: publish so subsequent
                 # read batches pin it instead of paying the retry dispatch
                 self._publish()
@@ -492,18 +599,26 @@ class DashFrontend(FrontendBase):
             job = self._insert_job
             if job.rounds > 256:
                 raise TableFullError("insert retry budget exhausted")
-            activated = self.table.insert_round(job)
+            with tr.span("insert_round", "serving",
+                         parent=self._batch_span):
+                activated = self.table.insert_round(job)
             self._dirty = True
             staged = self.table.smo_task_eligible()
             if job.done:
+                n_ops = len(self._insert_ops)
                 self._finish_writes(self._insert_ops, job.out)
+                bsp = self._batch_span
+                tr.end(bsp, rounds=job.rounds)
+                self._batch_span = None
                 self._insert_job, self._insert_ops = None, []
                 self._publish()
+                self._emit_write_ack(bsp, INSERT, n_ops)
                 if activated:   # LH stash activation still demands a split
                     if staged:
                         self._smo_task = self.table.make_smo_task(None)
                         if self._smo_task is not None:
                             self.table.note_smo(self._smo_task)
+                            self._begin_smo_span()
                     else:
                         self.table._on_pressure(None)
                         self._dirty = True
@@ -512,6 +627,7 @@ class DashFrontend(FrontendBase):
                 self._smo_task = self.table.make_smo_task(
                     self.table.pressure_hints(job))
                 self.table.note_smo(self._smo_task)
+                self._begin_smo_span()
             else:
                 # scalar / rebuild-ineligible configs keep the inline SMO
                 # (splits land inside this tick; reads still serve snapshots)
@@ -523,11 +639,14 @@ class DashFrontend(FrontendBase):
             return False
         kind = ops[0].kind
         if kind == INSERT:
+            self._batch_span = tr.begin("write_batch", "serving",
+                                        kind=kind, n=len(ops))
             self._insert_job = self.table.insert_begin(
                 [op.key for op in ops], [op.value for op in ops])
             self._insert_ops = ops
             # first round runs this tick; pressure (if any) defers to a task
             return self._pump_write()
+        bsp = tr.begin("write_batch", "serving", kind=kind, n=len(ops))
         keys = [op.key for op in ops]
         self._dirty = True
         if kind == UPDATE:
@@ -541,8 +660,19 @@ class DashFrontend(FrontendBase):
             statuses = self.table.update(
                 keys, [op.value for op in ops])
         self._finish_writes(ops, np.asarray(statuses))
+        tr.end(bsp)
         self._publish()
+        self._emit_write_ack(bsp, kind, len(ops))
         return True
+
+    def _slo_extra(self) -> dict:
+        """Per-tick facts the SLO snapshot carries beyond the registry:
+        health, epoch limbo depth, queue occupancy. Built lazily — only on
+        SLO evaluation ticks."""
+        return {"health": self.health,
+                "limbo_depth": self.registry.epochs.limbo_size,
+                "queue_depth": len(self.reads) + len(self.writes),
+                "unflushed_publishes": self.unflushed_publishes}
 
     def step(self) -> bool:
         did = super().step()
@@ -551,6 +681,9 @@ class DashFrontend(FrontendBase):
             if self._scrub_countdown <= 0:
                 self._scrub_countdown = self.scrub_interval
                 self.scrubber.tick(self.table.state)
+        # the SLO monitor ticks alongside the scrubber: one counter bump
+        # per tick, a windowed evaluation every eval_interval ticks
+        self.obs.slo.tick(self._slo_extra)
         return did
 
     def shutdown(self):
