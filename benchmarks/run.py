@@ -50,6 +50,7 @@ MODULES = [
     ("durable", "benchmarks.durable_restart"),
     ("fig15", "benchmarks.allocator"),
     ("dht", "benchmarks.dht_roofline"),
+    ("dhtpar", "benchmarks.dht_parallel"),
     ("kernel", "benchmarks.kernel_probe"),
     ("batchpar|latency", "benchmarks.batch_parallel"),
     ("smo", "benchmarks.smo"),

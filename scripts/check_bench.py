@@ -52,6 +52,18 @@ GATES = [
     ("BENCH_chaos.json", "matrix.wrong_reads", "==", 0),
     ("BENCH_chaos.json", "matrix.silent_lost", "==", 0),
     ("BENCH_chaos.json", "matrix.indeterminate_pending", "==", 0),
+    # ISSUE-9: device-resident DHT hot path vs host-mirror baseline
+    ("BENCH_dht_parallel.json", "verify.p99_ratio", "<=", 0.5),
+    ("BENCH_dht_parallel.json", "verify.host_plane_bytes", "==", 0),
+    ("BENCH_dht_parallel.json", "splits.speedup", ">=", 2.0),
+    ("BENCH_dht_parallel.json", "reopen.ttfq_ratio", "<=", 1.5),
+    ("BENCH_dht_parallel.json", "hist_agree.n", ">=", 1),
+    ("BENCH_dht_parallel.json", "hist_agree.p99_err", "<=", 0.10),
+    # DHT roofline: right-sized routing lanes keep per-device fabric bytes
+    # at the same order as the local HBM probe term (~82KB vs ~90KB at 1024
+    # q/dev; a lane-sizing regression would blow this up 16x)
+    ("BENCH_dht_roofline.json", "n_shards", ">=", 256),
+    ("BENCH_dht_roofline.json", "fabric_bytes_per_dev", "<=", 100_000),
 ]
 
 # -- regression tolerances vs the committed baseline -------------------------
@@ -70,6 +82,10 @@ REGRESSION = [
     ("BENCH_durable_restart.json", "storm.volume_ratio", "lower", 0.5),
     ("BENCH_durable_restart.json", "ttfq_spread", "lower", 0.5),
     ("BENCH_chaos.json", "scrub.bound_ticks", "lower", 0.5),
+    ("BENCH_dht_parallel.json", "verify.p99_ratio", "lower", 1.0),
+    ("BENCH_dht_parallel.json", "splits.speedup", "higher", 0.5),
+    ("BENCH_dht_parallel.json", "reopen.ttfq_ratio", "lower", 0.5),
+    ("BENCH_dht_roofline.json", "fabric_bytes_per_dev", "lower", 0.5),
 ]
 
 

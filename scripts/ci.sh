@@ -155,6 +155,63 @@ print(f"obs smoke OK: {len(acks)} acks linked, {n_flush} flush spans, "
       f"slo ticks={snap['slo']['tick']}")
 PY
 
+echo "== dht smoke (8-shard write -> kill -> lazy reopen -> serve) =="
+# writer: 8 fake devices, one durable pool per shard, flush, then DIE dirty
+XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+python - "$SMOKE_DIR/dht_shards" <<'PY'
+import os, sys
+import numpy as np
+from repro import persist
+from repro.core import DashConfig
+from repro.distributed import DistributedDash
+from repro.launch.mesh import make_test_mesh
+cfg = DashConfig(max_segments=32, dir_depth_max=8)
+d = DistributedDash(cfg, make_test_mesh(2, 4), axes=("data", "model"),
+                    capacity=256)
+d.attach_pools(persist.create_shard_pools(sys.argv[1], cfg, d.n_shards))
+keys = np.unique(np.random.default_rng(0xD1).integers(1, 2**63, 6000,
+                                                      np.uint64))[:2000]
+st = d.insert(keys, (np.arange(2000) + 1).astype(np.uint32))
+assert (st == 0).all()
+d.flush_pools()
+os._exit(0)
+PY
+# reopener: lazy default (eager_recover_dirty=False) -> O(1) reopen; the
+# first served reads must trigger per-access recovery, and the frontend's
+# obs snapshot must carry the aggregated per-shard registries
+XLA_FLAGS=--xla_force_host_platform_device_count=8 JAX_PLATFORMS=cpu \
+python - "$SMOKE_DIR/dht_shards" <<'PY'
+import sys
+import numpy as np
+from repro import persist
+from repro.core import DashConfig
+from repro.distributed import DistributedDash, ShardFrontend
+from repro.launch.mesh import make_test_mesh
+from repro.serving.frontend import Op, READ
+cfg = DashConfig(max_segments=32, dir_depth_max=8)
+stacked, wbs, info = persist.reopen_shards(sys.argv[1])
+assert info["dirty_shards"] == 8, info   # writer died dirty, no eager work
+d = DistributedDash(cfg, make_test_mesh(2, 4), axes=("data", "model"),
+                    capacity=256, state=stacked)
+d.attach_pools(wbs)
+fe = ShardFrontend(d, max_batch=256)
+assert d.recovered_segments == 0         # nothing recovered before access
+keys = np.unique(np.random.default_rng(0xD1).integers(1, 2**63, 6000,
+                                                      np.uint64))[:2000]
+ops = [Op(READ, int(k)) for k in keys[:512]]
+for op in ops:
+    assert fe.submit(op)
+fe.drain()
+assert all(op.found and op.result == i + 1 for i, op in enumerate(ops))
+assert d.recovered_segments > 0, "lazy recovery never fired on first access"
+snap = fe.obs_snapshot()
+agg = snap["shards"]["shard.read_sojourn_s"]
+assert agg["n"] == 512, agg              # fleet view sums per-shard regs
+assert len(snap["per_shard"]) == 8
+print(f"dht smoke OK: 512 reads served, "
+      f"{d.recovered_segments} segments lazily recovered")
+PY
+
 echo "== bench gates (committed artifacts satisfy acceptance bounds) =="
 python scripts/check_bench.py --self
 

@@ -196,6 +196,42 @@ def recover_all(cfg: DashConfig, mode: str, state: DashState):
     return state
 
 
+def dirty_touched_segments(state: DashState, touched) -> list:
+    """Which of the ``touched`` segment ids still owe post-crash recovery
+    (their ``seg_version`` lags the recovery generation)? Host-side gate of
+    the per-access lazy hook — shared by the single-table access path and
+    the DHT's per-shard ``ensure_recovered``."""
+    gver = int(np.asarray(state.gver))
+    seg_ver = np.asarray(state.seg_version)
+    out = []
+    for seg in np.unique(np.asarray(touched)):
+        if seg >= 0 and int(seg_ver[seg]) != gver:
+            out.append(int(seg))
+    return out
+
+
+def lazy_recover_touched(cfg: DashConfig, mode: str, state: DashState,
+                         touched, note=None):
+    """Recover exactly the dirty segments among ``touched`` (paper Sec. 4.8:
+    recovery work proportional to data *accessed*, not data stored).
+
+    ``note(seg, affected)``, if given, is called BEFORE each segment's
+    recovery with the segment ids the repair may rewrite (the segment, its
+    side-link, and any segment side-linked to it) — callers use it to mark
+    copy-on-write rows dirty or emit trace events. Returns
+    ``(state, recovered_ids)``."""
+    recovered = []
+    for seg in dirty_touched_segments(state, touched):
+        if note is not None:
+            side = np.asarray(state.side_link)
+            affected = [seg, int(side[seg])]
+            affected += [int(s) for s in np.nonzero(side == seg)[0]]
+            note(seg, affected)
+        state = recover_segment_host(cfg, mode, state, seg)
+        recovered.append(seg)
+    return state, recovered
+
+
 # ---------------------------------------------------------------------------
 # media-fault quarantine (PR 6): checksum-failing pool rows at reopen
 # ---------------------------------------------------------------------------

@@ -221,10 +221,13 @@ def _scatter_planes(cfg: DashConfig, state: DashState, dst, planes):
 # bulk EH split (phase 1 + phase 2, K segments per dispatch)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
-def bulk_split_phase1(cfg: DashConfig, state: DashState, old, new, valid):
-    """Allocate + initialize + link all K new segments in one dispatch
-    (paper Sec. 4.7 step 1, vectorized). ``valid`` masks padding lanes."""
+def bulk_split_phase1_local(cfg: DashConfig, state: DashState, old, new,
+                            valid):
+    """Unjitted body of :func:`bulk_split_phase1` — traceable inside a
+    larger program (the distributed layer runs it per-shard under
+    ``shard_map``). Allocate + initialize + link all K new segments in one
+    dispatch (paper Sec. 4.7 step 1, vectorized). ``valid`` masks padding
+    lanes."""
     S = cfg.max_segments
     o = jnp.where(valid, old, S)
     n = jnp.where(valid, new, S)
@@ -244,10 +247,18 @@ def bulk_split_phase1(cfg: DashConfig, state: DashState, old, new, valid):
     )
 
 
-@functools.partial(jax.jit, static_argnums=(0, 5), donate_argnums=(1,))
-def bulk_split_phase2(cfg: DashConfig, state: DashState, old, new, valid,
-                      check_unique: bool = False):
-    """Rebuild + single directory publish for K splits. With
+@functools.partial(jax.jit, static_argnums=(0,), donate_argnums=(1,))
+def bulk_split_phase1(cfg: DashConfig, state: DashState, old, new, valid):
+    """Jitted entry point over :func:`bulk_split_phase1_local`."""
+    return bulk_split_phase1_local(cfg, state, old, new, valid)
+
+
+def bulk_split_phase2_local(cfg: DashConfig, state: DashState, old, new,
+                            valid, check_unique: bool = False):
+    """Unjitted body of :func:`bulk_split_phase2` — traceable inside a
+    larger program (shard-local splits under ``shard_map``).
+
+    Rebuild + single directory publish for K splits. With
     ``check_unique=True`` (recovery redo) both halves are extracted and
     deduped first, making the phase idempotent.  Returns (state, ok (K,));
     a False lane was NOT committed (its source segment is untouched, still
@@ -304,6 +315,63 @@ def bulk_split_phase2(cfg: DashConfig, state: DashState, old, new, valid,
             active.reshape(-1), mode="drop"),
     )
     return state, ok | ~valid
+
+
+@functools.partial(jax.jit, static_argnums=(0, 5), donate_argnums=(1,))
+def bulk_split_phase2(cfg: DashConfig, state: DashState, old, new, valid,
+                      check_unique: bool = False):
+    """Jitted entry point over :func:`bulk_split_phase2_local`."""
+    return bulk_split_phase2_local(cfg, state, old, new, valid, check_unique)
+
+
+# ---------------------------------------------------------------------------
+# shard-local split planning (device-resident DHT hot path)
+# ---------------------------------------------------------------------------
+
+def plan_local_splits(cfg: DashConfig, state: DashState, h1, want, k_max: int):
+    """Plan up to ``k_max`` segment splits from pressured keys, entirely on
+    device — the traced twin of the host ``np.unique`` planning loop in the
+    DHT's ``split_for``.
+
+    ``h1`` (N,) are hash1 values of this shard's keys, ``want`` (N,) the
+    lanes demanding a split (status NEED_SPLIT).  Dedupes their directory
+    targets to unique segment ids, assigns fresh ids off the watermark, and
+    reports resource exhaustion as flags rather than committing a partial
+    plan.  Returns ``(old, new, valid, depth_bad, pool_bad)`` with ``old`` /
+    ``new`` / ``valid`` shaped (k_max,).  More than ``k_max`` pressured
+    segments is fine: the surplus lanes stay NEED_SPLIT and are planned next
+    round.
+    """
+    S = cfg.max_segments
+    d = layout.dir_index(cfg, h1)
+    seg = jnp.where(want, state.dir[d].astype(I32), S)
+    seg_sorted = jnp.sort(seg)
+    first = jnp.concatenate([jnp.ones((1,), jnp.bool_),
+                             seg_sorted[1:] != seg_sorted[:-1]])
+    uniq = first & (seg_sorted < S)
+    pos = jnp.cumsum(uniq.astype(I32)) - 1
+    old = jnp.full((k_max,), -1, I32).at[
+        jnp.where(uniq & (pos < k_max), pos, k_max)
+    ].set(seg_sorted.astype(I32), mode="drop")
+    valid = old >= 0
+    k = jnp.sum(valid.astype(I32))
+    new = jnp.where(valid,
+                    state.watermark + jnp.cumsum(valid.astype(I32)) - 1, -1)
+    depth_bad = jnp.any(valid & (state.local_depth[jnp.clip(old, 0, S - 1)]
+                                 >= cfg.dir_depth_max))
+    pool_bad = state.watermark + k > S
+    return old, new, valid, depth_bad, pool_bad
+
+
+def split_segments_local(cfg: DashConfig, state: DashState, old, new, valid):
+    """Phase-1 + phase-2 of a bulk split as one traced body (no jit, no
+    donation) — what the DHT's shard program runs on its local sub-state so
+    all pressured shards split in a single dispatch.  Returns
+    ``(state, ok (K,))`` with phase-2's not-committed semantics for False
+    lanes (source still SPLITTING; the host repairs via the scan fallback).
+    """
+    state = bulk_split_phase1_local(cfg, state, old, new, valid)
+    return bulk_split_phase2_local(cfg, state, old, new, valid, False)
 
 
 class BulkSplitTask:

@@ -235,24 +235,21 @@ class DashTable:
         """Lazy per-segment recovery over precomputed touched segment ids."""
         if not self.lazy_recovery:
             return
-        gver = int(np.asarray(self.state.gver))
-        seg_ver = np.asarray(self.state.seg_version)
-        for seg in np.unique(touched):
-            if seg >= 0 and int(seg_ver[seg]) != gver:
-                # recovery may continue an in-flight SMO: the side-linked
-                # neighbor (either direction) and the directory are fair game
-                side = np.asarray(self.state.side_link)
-                self.dirty.note_segments([seg, int(side[seg])])
-                self.dirty.note_segments(np.nonzero(side == seg)[0])
-                self.dirty.note_dir()
-                self.state = recovery.recover_segment_host(
-                    self.cfg, self.mode, self.state, int(seg))
-                self.recovered_segments += 1
-                if self.obs is not None:
-                    self.obs.registry.counter(
-                        "table.lazy_recoveries").inc()
-                    self.obs.tracer.instant("lazy_recovery", "recovery",
-                                            segment=int(seg))
+
+        def note(seg, affected):
+            # recovery may continue an in-flight SMO: the side-linked
+            # neighbor (either direction) and the directory are fair game
+            self.dirty.note_segments(affected)
+            self.dirty.note_dir()
+
+        self.state, recovered = recovery.lazy_recover_touched(
+            self.cfg, self.mode, self.state, touched, note=note)
+        self.recovered_segments += len(recovered)
+        if self.obs is not None:
+            for seg in recovered:
+                self.obs.registry.counter("table.lazy_recoveries").inc()
+                self.obs.tracer.instant("lazy_recovery", "recovery",
+                                        segment=seg)
 
     # -- public ops -----------------------------------------------------------
 

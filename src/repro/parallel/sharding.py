@@ -204,3 +204,11 @@ def logical_constraint(x, names):
         return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(mesh, _resolve(tuple(names), dims=tuple(x.shape))))
+
+
+def shard_specs(axes, tree):
+    """PartitionSpecs for a stacked per-shard pytree: every leaf carries the
+    shard dimension first and shards over ``axes`` (the distributed DHT's
+    state layout — one Dash table per device, stacked on dim 0)."""
+    axes = tuple(axes)
+    return jax.tree.map(lambda _: P(axes), tree)

@@ -224,7 +224,7 @@ def recover_shards(state: DashState, wbs: List[WritebackEngine]) -> int:
     return back
 
 
-def reopen_shards(dirpath: str, eager_recover_dirty: bool = True,
+def reopen_shards(dirpath: str, eager_recover_dirty: bool = False,
                   verify: bool = True, faults: Optional[list] = None,
                   retries: int = 2, retry_base_s: float = 0.002
                   ) -> Tuple[DashState, List[WritebackEngine], dict]:
@@ -232,11 +232,15 @@ def reopen_shards(dirpath: str, eager_recover_dirty: bool = True,
     into one ``(n_shards, ...)`` host pytree (the caller device_puts it with
     its mesh sharding — see ``DistributedDash``).
 
-    Per-shard recovery: a shard whose pool reopened dirty is eagerly
-    recovered here (``recovery.recover_all``) — the sharded data plane has
-    no per-access lazy hook (reads run inside one shard_map dispatch), so
-    the work lands at reopen, shard-local and independent. Clean shards pay
-    nothing.
+    Per-shard recovery is LAZY by default, like the single-table path: the
+    shard_map probe carries a per-access hook (a lane whose segment's
+    ``seg_version`` lags the recovery generation is flagged/bounced), and
+    ``DistributedDash.ensure_recovered`` repairs exactly the touched
+    segments on first access — so a dirty fleet reopen is O(1) in stored
+    data. Pass ``eager_recover_dirty=True`` for the CCEH-style contrast
+    (full ``recovery.recover_all`` per dirty shard at reopen). Clean shards
+    pay nothing either way. ``info['dirty_shard_ids']`` lists which shards
+    reopened dirty.
 
     Fault isolation (PR 6): each shard's reopen is retried ``retries``
     times with exponential backoff on transient flush errors; a shard that
@@ -250,6 +254,7 @@ def reopen_shards(dirpath: str, eager_recover_dirty: bool = True,
         raise PoolError(f"no shard pools under {dirpath}")
     wbs, shards = [], []
     dirty = degraded = 0
+    dirty_ids = []
     lost_reports = {}
     for i, p in enumerate(paths):
         plan = faults[i] if faults else None
@@ -278,6 +283,7 @@ def reopen_shards(dirpath: str, eager_recover_dirty: bool = True,
                 st = recovery.heap_top_floor(pool.cfg, st)
                 if not work["clean"]:
                     dirty += 1
+                    dirty_ids.append(i)
                     if eager_recover_dirty:
                         st = recovery.recover_all(pool.cfg, "eh", st)
                 wb.flush(st)           # dirty-serving marker, per shard
@@ -298,6 +304,7 @@ def reopen_shards(dirpath: str, eager_recover_dirty: bool = True,
     stacked = DashState(*[jnp.stack([getattr(s, n) for s in shards])
                           for n in DashState._fields])
     return stacked, wbs, {"n_shards": len(wbs), "dirty_shards": dirty,
+                          "dirty_shard_ids": dirty_ids,
                           "degraded_shards": degraded,
                           "lost_reports": lost_reports,
                           "cfg": wbs[0].pool.cfg}

@@ -135,9 +135,12 @@ class ServingEngine:
 # optimistic snapshot search (system-level Sec. 4.4)
 # ---------------------------------------------------------------------------
 
-@functools.partial(jax.jit, static_argnums=(0, 1))
-def buckets_changed(cfg, mode, old_state, new_state, keys_hi, keys_lo):
-    """Per-query bool mask: could this query observe different records on
+def buckets_changed_local(cfg, mode, old_state, new_state, keys_hi, keys_lo):
+    """Unjitted body of :func:`buckets_changed` — pure ``jnp``, traceable
+    inside a larger program (the distributed layer inlines it per-shard
+    under ``shard_map`` so the verify never leaves the device).
+
+    Per-query bool mask: could this query observe different records on
     ``new_state`` than on the ``old_state`` snapshot?
 
     This is the verify step of the snapshot-verify-retry contract (the
@@ -179,6 +182,15 @@ def buckets_changed(cfg, mode, old_state, new_state, keys_hi, keys_lo):
         changed = changed | (old_state.version[seg, sb]
                              != new_state.version[seg, sb])
     return changed
+
+
+@functools.partial(jax.jit, static_argnums=(0, 1))
+def buckets_changed(cfg, mode, old_state, new_state, keys_hi, keys_lo):
+    """Jitted entry point over :func:`buckets_changed_local` — the host-side
+    verify used by the single-table frontends (and the DHT's retained
+    host-mirror baseline)."""
+    return buckets_changed_local(cfg, mode, old_state, new_state,
+                                 keys_hi, keys_lo)
 
 
 def snapshot_search(cfg, old_state, new_state, keys_hi, keys_lo,

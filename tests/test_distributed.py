@@ -232,3 +232,139 @@ def test_dht_durable_shard_pools(tmp_path):
         print("REOPEN OK", int(f.sum()))
     """)
     assert "REOPEN OK 3000" in out
+
+
+def test_dht_device_retry_never_inserts_zero_key():
+    """Satellite regression for the shard_map *device* retry path: the
+    all_to_all routing pads empty lanes with key 0, and the batch shaper
+    pads the tail when the batch doesn't divide the shard count. Under
+    forced split retries (tiny segments) those padded lanes loop through
+    ``insert_round_fn`` many times — none may ever land key 0."""
+    out = run_sub("""
+        import numpy as np
+        import jax.numpy as jnp
+        from repro.core import DashConfig, INSERTED, layout
+        from repro.distributed import DistributedDash
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(2, 4)
+        cfg = DashConfig(max_segments=32, dir_depth_max=8, init_depth=1,
+                         num_buckets=16, num_slots=8)
+        d = DistributedDash(cfg, mesh, axes=("data", "model"), capacity=256)
+        rng = np.random.default_rng(23)
+        # 2777 % 8 != 0 -> tail padding on top of routing padding
+        keys = np.unique(rng.integers(1, 2**63, 8000, dtype=np.uint64))[:2777]
+        vals = np.arange(2777, dtype=np.uint32) % 1000 + 1
+        # device loop (insert_round_fn + split_fn), NOT the host-sync path
+        st = d.insert(keys, vals)
+        assert (st == INSERTED).all()
+        assert np.asarray(d.state.watermark).max() > 2   # splits forced
+        f0, _ = d.search(np.zeros(8, np.uint64))
+        assert f0.sum() == 0, "padded lane inserted key 0"
+        meta = np.asarray(d.state.meta)
+        recount = int(((meta >> layout.COUNT_SHIFT) & 0xF).sum())
+        assert d.n_items == 2777 == recount, (d.n_items, recount)
+        # a phantom zero-key would also surface as a stored fp for key 0:
+        f, v = d.search(keys)
+        assert f.all() and (v == vals).all()
+        print("ZERO KEY OK", d.n_items)
+    """)
+    assert "ZERO KEY OK 2777" in out
+
+
+def test_dht_device_verify_matches_host_mirror():
+    """Satellite differential: the device-resident retry mask produced
+    inside the shard_map program (``snap_search_fn``'s changed word) must
+    equal the host-mirror plane diff (``ShardFrontend._changed_mask``)
+    across randomized SMO/read interleavings on 8 shards."""
+    out = run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core import DashConfig
+        from repro.distributed import DistributedDash, ShardFrontend
+        from repro.launch.mesh import make_test_mesh
+        mesh = make_test_mesh(2, 4)
+        cfg = DashConfig(max_segments=32, dir_depth_max=8, init_depth=1,
+                         num_buckets=16, num_slots=8)
+        d = DistributedDash(cfg, mesh, axes=("data", "model"), capacity=256)
+        fe = ShardFrontend(d, max_batch=256, verify_mode="host")
+        rng = np.random.default_rng(41)
+        keys = np.unique(rng.integers(1, 2**63, 24000, dtype=np.uint64))[:9000]
+        vals = (np.arange(9000) % 1000 + 1).astype(np.uint32)
+        d.insert(keys[:1500], vals[:1500])
+        cursor, total = 1500, 0
+        for step in range(50):
+            old = jax.tree.map(jnp.copy, d.state)
+            n = int(rng.integers(0, 140))   # 0 => read-only interleaving
+            if n:
+                d.insert(keys[cursor:cursor + n], vals[cursor:cursor + n])
+                cursor += n
+            probe = keys[rng.integers(0, cursor, 512)]
+            _, _, dev, stale = d.snap_search_on(old, probe)
+            assert not stale.any()
+            host = fe._changed_mask(old, probe)
+            assert (dev.astype(bool) == host).all(), step
+            total += int(host.sum())
+        assert total > 0              # the interleavings actually raced
+        print("VERIFY DIFF OK", cursor, total)
+    """)
+    assert "VERIFY DIFF OK" in out
+
+
+def test_buckets_changed_lh_device_matches_host_mirror():
+    """The LH half of the differential satellite: DHT shards are EH tables,
+    so LH is exercised at the per-shard level — the traceable
+    ``buckets_changed_local`` (what the shard program inlines) against an
+    independent numpy mirror of the LH addressing + version-plane diff."""
+    out = run_sub("""
+        import jax, numpy as np
+        import jax.numpy as jnp
+        from repro.core import DashConfig, DashLH, hashing, layout
+        from repro.serving.engine import buckets_changed
+        cfg = DashConfig(max_segments=64, num_stash=4, num_buckets=16,
+                         num_slots=8, lh_base_log2=2)
+        t = DashLH(cfg)
+        rng = np.random.default_rng(57)
+        keys = np.unique(rng.integers(1, 2**63, 16000, dtype=np.uint64))[:6000]
+
+        def host_mask(old, new, probe):
+            hi, lo = hashing.np_split_keys(probe)
+            h1 = hashing.np_hash1(hi, lo)
+            def seg_of(st):
+                w = int(np.asarray(st.lh_word))
+                level, nxt = w >> 24, w & 0xFFFFFF
+                mask_lo = (np.uint32(1) << np.uint32(cfg.lh_base_log2 + level)) - 1
+                seg = (h1 & mask_lo).astype(np.int64)
+                mask_hi = (mask_lo << np.uint32(1)) | np.uint32(1)
+                logical = np.where(seg < nxt, (h1 & mask_hi).astype(np.int64), seg)
+                return np.asarray(st.lh_dir)[logical]   # logical -> physical
+            so, sn = seg_of(old), seg_of(new)
+            changed = so != sn
+            b = ((h1 >> np.uint32(24)) & np.uint32(cfg.num_buckets - 1)).astype(np.int64)
+            ov, nv = np.asarray(old.version), np.asarray(new.version)
+            for w in range(cfg.probe_window):
+                bw = (b + w) & (cfg.num_buckets - 1)
+                changed |= ov[so, bw] != nv[so, bw]
+            for s in range(cfg.num_stash):
+                changed |= ov[so, cfg.num_buckets + s] != nv[so, cfg.num_buckets + s]
+            return changed
+
+        cursor, total = 0, 0
+        for step in range(50):
+            old = jax.tree.map(jnp.copy, t.state)
+            n = min(int(rng.integers(0, 220)),   # big batches drive
+                    keys.size - cursor)          # lh_split_next
+            if n:
+                t.insert(keys[cursor:cursor + n],
+                         np.arange(n, dtype=np.uint32) + 1)
+                cursor += n
+            probe = keys[rng.integers(0, max(cursor, 1), 512)]
+            hi, lo = hashing.np_split_keys(probe)
+            dev = np.asarray(buckets_changed(cfg, "lh", old, t.state,
+                                             jnp.asarray(hi), jnp.asarray(lo)))
+            host = host_mask(old, t.state, probe)
+            assert (dev.astype(bool) == host).all(), step
+            total += int(host.sum())
+        assert total > 0
+        print("LH DIFF OK", cursor, total)
+    """)
+    assert "LH DIFF OK" in out
